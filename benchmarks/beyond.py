@@ -1,0 +1,91 @@
+"""Beyond-paper benchmarks (DESIGN.md §7):
+  * EF-TRA: error-feedback re-injection of dropped packets
+  * debias estimator shoot-out (paper Eq.1 vs per-client vs per-coord)
+  * AFL under TRA (minimax fairness the paper cites but does not run)
+"""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, run_fl
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.tra import TRAConfig
+
+
+def _run_ef(algo, data, loss_rate, ef, rounds=40, seeds=(0, 1, 2)):
+    import numpy as np
+    from benchmarks.common import networks
+    accs, w10s = [], []
+    for seed in seeds:
+        cfg = FLConfig(algo=algo, n_rounds=rounds, clients_per_round=10,
+                       local_steps=10, eval_every=10 ** 6, selection="all",
+                       error_feedback=ef, seed=seed,
+                       tra=TRAConfig(enabled=True, loss_rate=loss_rate,
+                                     debias="group_rate", threshold_mbps=1e9))
+        s = FederatedServer(cfg, data, networks())
+        s.run()
+        r = s.evaluate()
+        accs.append(r.sample_average)
+        w10s.append(r.worst10)
+    return {"sample_average": float(np.mean(accs)),
+            "worst10": float(np.mean(w10s)), "n_seeds": len(seeds)}
+
+
+def ef_tra():
+    """EF-TRA vs plain TRA at 30%/50% loss, every upload lossy
+    (3-seed means)."""
+    data = dataset(1.0, 1.0)
+    rows = {}
+    for lr_ in (0.3, 0.5):
+        rows[f"loss_{int(lr_*100)}"] = {
+            "tra": _run_ef("qfedavg", data, lr_, False),
+            "ef_tra": _run_ef("qfedavg", data, lr_, True),
+        }
+    d30, d50 = rows["loss_30"], rows["loss_50"]
+    emit("beyond_ef_tra", 0.0,
+         f"acc@30%: {d30['tra']['sample_average']*100:.1f}->"
+         f"{d30['ef_tra']['sample_average']*100:.1f}% "
+         f"@50%: {d50['tra']['sample_average']*100:.1f}->"
+         f"{d50['ef_tra']['sample_average']*100:.1f}%", rows)
+
+
+def debias_estimators():
+    """group_rate (paper Eq.1) vs per_client_rate vs per_coord_count."""
+    data = dataset(1.0, 1.0)
+    rows = {}
+    for mode in ("none", "group_rate", "per_client_rate", "per_coord_count"):
+        rows[mode] = run_fl("qfedavg", data, selection="all",
+                            tra_enabled=True, loss_rate=0.3, debias=mode)
+    emit("beyond_debias_estimators",
+         rows["per_coord_count"]["us_per_round"],
+         " ".join(f"{m}={rows[m]['sample_average']*100:.1f}%"
+                  for m in rows), rows)
+
+
+def afl_tra():
+    """AFL (agnostic FL minimax) with TRA full participation vs threshold."""
+    data = dataset(1.0, 1.0)
+    rows = {
+        "afl_biased_70": run_fl("afl", data, selection="ratio", ratio=0.7),
+        "afl_tra_10": run_fl("afl", data, selection="all", tra_enabled=True,
+                             loss_rate=0.1),
+    }
+    emit("beyond_afl_tra", rows["afl_tra_10"]["us_per_round"],
+         f"worst10: {rows['afl_biased_70']['worst10']*100:.1f}->"
+         f"{rows['afl_tra_10']['worst10']*100:.1f}%", rows)
+
+
+def scaffold_tra():
+    """SCAFFOLD (variance-reduced FL, cited by the paper as a baseline that
+    'cannot tackle' selection bias) under threshold vs TRA selection."""
+    data = dataset(1.0, 1.0)
+    rows = {
+        "scaffold_biased_70": run_fl("scaffold", data, selection="ratio",
+                                     ratio=0.7),
+        "scaffold_tra_10": run_fl("scaffold", data, selection="all",
+                                  tra_enabled=True, loss_rate=0.1),
+    }
+    emit("beyond_scaffold_tra", rows["scaffold_tra_10"]["us_per_round"],
+         f"acc: {rows['scaffold_biased_70']['sample_average']*100:.1f}->"
+         f"{rows['scaffold_tra_10']['sample_average']*100:.1f}%", rows)
+
+
+ALL = [ef_tra, debias_estimators, afl_tra, scaffold_tra]

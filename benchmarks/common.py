@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding: scenario runner + CSV/JSON emission.
+
+CPU-scale reproduction settings: the paper's synthetic datasets with a
+30-client cohort, 10 clients/round. Paper-scale round counts are trimmed
+to keep the single-core CPU budget sane; directional conclusions are the
+validation target (EXPERIMENTS.md compares against the paper's numbers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.tra import TRAConfig
+from repro.data.synthetic import FederatedDataset, generate_synthetic
+from repro.network.trace import ClientNetworks
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+N_CLIENTS = 30
+ROUNDS = 60
+CPR = 10
+SEED = 7
+
+_DATA_CACHE: Dict = {}
+
+
+def dataset(alpha: float, beta: float, iid: bool = False) -> FederatedDataset:
+    key = (alpha, beta, iid)
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = generate_synthetic(
+            np.random.default_rng(SEED), n_clients=N_CLIENTS,
+            alpha=alpha, beta=beta, iid=iid)
+    return _DATA_CACHE[key]
+
+
+def networks() -> ClientNetworks:
+    # strictly ordered speeds -> deterministic eligible sets per ratio
+    speed = np.linspace(0.5, 24.0, N_CLIENTS)
+    return ClientNetworks(speed, np.full(N_CLIENTS, 0.05))
+
+
+def run_fl(algo: str, data: FederatedDataset, *, selection="all", ratio=1.0,
+           tra_enabled=False, loss_rate=0.1, debias="group_rate",
+           rounds=ROUNDS, q=1.0, seed=0, lr=None,
+           personalized=False) -> Dict[str, float]:
+    if lr is None:
+        lr = 0.05 if algo == "scaffold" else 0.1
+    cfg = FLConfig(algo=algo, n_rounds=rounds, clients_per_round=CPR,
+                   local_steps=10, eval_every=10 ** 6, seed=seed, q=q, lr=lr,
+                   selection=selection, eligible_ratio=ratio,
+                   tra=TRAConfig(enabled=tra_enabled, loss_rate=loss_rate,
+                                 debias=debias))
+    srv = FederatedServer(cfg, data, networks())
+    t0 = time.time()
+    srv.run()
+    dt = time.time() - t0
+    rep = srv.evaluate()
+    out = dict(rep.as_dict(), seconds=dt, rounds=rounds,
+               us_per_round=dt / rounds * 1e6)
+    if personalized:
+        out["personal"] = srv.evaluate_personalized().as_dict()
+    return out
+
+
+def emit(name: str, us_per_call: float, derived, payload: Optional[dict] = None):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    if payload is not None:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float)

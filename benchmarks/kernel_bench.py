@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: pallas interpret vs jnp oracle (CPU timing is
+NOT TPU-representative — correctness + call overhead tracking only; TPU
+perf is assessed structurally via BlockSpec VMEM accounting in
+EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def kernel_packet_mask():
+    from repro.kernels.packet_mask.ops import apply_packet_mask
+    D, P = 1 << 20, 1 << 12
+    vec = jnp.ones(D)
+    mask = jnp.ones(P)
+    us_k = _time(lambda v, m: apply_packet_mask(v, m, use_kernel=True),
+                 vec, mask)
+    us_r = _time(lambda v, m: apply_packet_mask(v, m, use_kernel=False),
+                 vec, mask)
+    emit("kernel_packet_mask", us_k, f"ref_us={us_r:.0f}",
+         {"kernel_us": us_k, "ref_us": us_r, "D": D})
+
+
+def kernel_tra_agg():
+    from repro.kernels.tra_agg.ops import tra_aggregate
+    C, D = 16, 1 << 18
+    x = jnp.ones((C, D))
+    P = -(-D // 256)
+    m = jnp.ones((C, P))
+    w = jnp.ones(C)
+    us_k = _time(lambda: tra_aggregate(x, m, w, use_kernel=True))
+    us_r = _time(lambda: tra_aggregate(x, m, w, use_kernel=False))
+    emit("kernel_tra_agg", us_k, f"ref_us={us_r:.0f}",
+         {"kernel_us": us_k, "ref_us": us_r, "C": C, "D": D})
+
+
+def kernel_qfed_reweight():
+    from repro.kernels.qfed_reweight.ops import qfed_reweight
+    C, D = 16, 1 << 18
+    dw = jnp.ones((C, D))
+    losses = jnp.ones(C)
+    us_k = _time(lambda: qfed_reweight(dw, losses, 1.0, 10.0,
+                                       use_kernel=True))
+    us_r = _time(lambda: qfed_reweight(dw, losses, 1.0, 10.0,
+                                       use_kernel=False))
+    emit("kernel_qfed_reweight", us_k, f"ref_us={us_r:.0f}",
+         {"kernel_us": us_k, "ref_us": us_r, "C": C, "D": D})
+
+
+ALL = [kernel_packet_mask, kernel_tra_agg, kernel_qfed_reweight]

@@ -1,0 +1,143 @@
+"""One benchmark per paper table/figure (§3 bottleneck study + §5 eval)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, networks, run_fl
+
+RATIOS = (1.0, 0.9, 0.8, 0.7)
+LOSS_RATES = (0.1, 0.3, 0.5)
+
+
+def fig2_network_cdf():
+    """Paper Fig.2: FCC trace CDF calibration points."""
+    from repro.network.trace import sample_networks
+    t0 = time.time()
+    nets = sample_networks(np.random.default_rng(0), 100_000)
+    stats = {
+        "loss_lt_0.1": float((nets.packet_loss < 0.1).mean()),
+        "speed_gt_2mbps": float((nets.upload_mbps > 2).mean()),
+        "speed_gt_8mbps": float((nets.upload_mbps > 8).mean()),
+        "speed_cdf": {str(q): float(np.quantile(nets.upload_mbps, q))
+                      for q in (0.1, 0.24, 0.49, 0.75, 0.9)},
+    }
+    emit("fig2_network_cdf", (time.time() - t0) * 1e6,
+         f"P(loss<0.1)={stats['loss_lt_0.1']:.3f}", stats)
+
+
+def fig3_fedavg_bias():
+    """Paper Fig.3: FedAvg accuracy vs eligible ratio, Synthetic(0.5,0.5).
+    Paper: 83.52 / 75.60 / 64.10 / 62.60 % at 100/90/80/70%."""
+    data = dataset(0.5, 0.5)
+    rows = {}
+    for r in RATIOS:
+        sel = "all" if r == 1.0 else "ratio"
+        res = run_fl("fedavg", data, selection=sel, ratio=r)
+        rows[f"ratio_{int(r*100)}"] = res
+    derived = "/".join(f"{rows[f'ratio_{int(r*100)}']['sample_average']*100:.1f}"
+                       for r in RATIOS)
+    emit("fig3_fedavg_bias", rows["ratio_70"]["us_per_round"],
+         f"acc@100/90/80/70%={derived}", rows)
+
+
+def table1_qfed_bias():
+    """Paper Table 1: q-FedAvg fairness +- 70% threshold on iid/(0.5)/(1,1)."""
+    rows = {}
+    for name, (a, b, iid) in {
+        "iid": (0.0, 0.0, True),
+        "synthetic_0.5_0.5": (0.5, 0.5, False),
+        "synthetic_1_1": (1.0, 1.0, False),
+    }.items():
+        data = dataset(a, b, iid)
+        rows[name] = {
+            "no_threshold": run_fl("qfedavg", data, selection="all"),
+            "threshold_70": run_fl("qfedavg", data, selection="ratio",
+                                   ratio=0.7),
+        }
+    d = rows["synthetic_1_1"]
+    emit("table1_qfed_bias", d["threshold_70"]["us_per_round"],
+         f"var(1,1) {d['no_threshold']['variance']:.0f}->"
+         f"{d['threshold_70']['variance']:.0f}", rows)
+
+
+def fig7_tra_qfedavg_aggregation():
+    """Paper Fig.7: sample-based accuracy, Synthetic(1,1) & (2,2);
+    biased FedAvg vs biased q-FedAvg vs TRA-q-FedAvg at 70/80/90% and
+    10/30/50% loss."""
+    rows = {}
+    for ds_name, (a, b) in {"synthetic_1_1": (1, 1),
+                            "synthetic_2_2": (2, 2)}.items():
+        data = dataset(a, b)
+        per = {}
+        for r in (0.7, 0.8, 0.9):
+            cell = {
+                "fedavg_biased": run_fl("fedavg", data, selection="ratio",
+                                        ratio=r),
+                "qfedavg_biased": run_fl("qfedavg", data, selection="ratio",
+                                         ratio=r),
+            }
+            for lr_ in LOSS_RATES:
+                cell[f"tra_qfedavg_{int(lr_*100)}"] = run_fl(
+                    "qfedavg", data, selection="all", tra_enabled=True,
+                    loss_rate=lr_)
+            per[f"ratio_{int(r*100)}"] = cell
+        rows[ds_name] = per
+    c = rows["synthetic_1_1"]["ratio_70"]
+    gain = (c["tra_qfedavg_10"]["sample_average"]
+            - c["fedavg_biased"]["sample_average"]) * 100
+    emit("fig7_tra_qfedavg", c["tra_qfedavg_10"]["us_per_round"],
+         f"TRA10-vs-biasedFedAvg@70%(1,1)=+{gain:.2f}pp", rows)
+
+
+def table2_fairness():
+    """Paper Table 2: client-based fairness, Synthetic(1,1)&(2,2)/70%."""
+    rows = {}
+    for ds_name, (a, b) in {"synthetic_1_1": (1, 1),
+                            "synthetic_2_2": (2, 2)}.items():
+        data = dataset(a, b)
+        cell = {"qfedavg_biased": run_fl("qfedavg", data, selection="ratio",
+                                         ratio=0.7)}
+        for lr_ in LOSS_RATES:
+            cell[f"tra_qfedavg_{int(lr_*100)}"] = run_fl(
+                "qfedavg", data, selection="all", tra_enabled=True,
+                loss_rate=lr_)
+        rows[ds_name] = cell
+    c = rows["synthetic_1_1"]
+    emit("table2_fairness", c["qfedavg_biased"]["us_per_round"],
+         f"worst10: biased={c['qfedavg_biased']['worst10']*100:.1f}% "
+         f"tra10={c['tra_qfedavg_10']['worst10']*100:.1f}%", rows)
+
+
+def fig9_tra_pfedme():
+    """Paper Fig.9: pFedMe personalization under bias vs TRA (10/20/30%)."""
+    data = dataset(0.5, 0.5)
+    rows = {"pfedme_biased": run_fl("pfedme", data, selection="ratio",
+                                    ratio=0.7, personalized=True)}
+    for lr_ in (0.1, 0.2, 0.3):
+        rows[f"tra_pfedme_{int(lr_*100)}"] = run_fl(
+            "pfedme", data, selection="all", tra_enabled=True,
+            loss_rate=lr_, personalized=True)
+    g = (rows["tra_pfedme_10"]["sample_average"]
+         - rows["pfedme_biased"]["sample_average"]) * 100
+    emit("fig9_tra_pfedme", rows["pfedme_biased"]["us_per_round"],
+         f"global gain=+{g:.2f}pp", rows)
+
+
+def fig5_perfedavg_bias():
+    """Paper Fig.5: Per-FedAvg degradation under eligible-ratio bias."""
+    data = dataset(0.5, 0.5)
+    rows = {}
+    for r in RATIOS:
+        sel = "all" if r == 1.0 else "ratio"
+        rows[f"ratio_{int(r*100)}"] = run_fl("perfedavg", data, selection=sel,
+                                             ratio=r, personalized=True)
+    emit("fig5_perfedavg_bias", rows["ratio_70"]["us_per_round"],
+         f"acc@100%={rows['ratio_100']['sample_average']*100:.1f} "
+         f"@70%={rows['ratio_70']['sample_average']*100:.1f}", rows)
+
+
+ALL = [fig2_network_cdf, fig3_fedavg_bias, table1_qfed_bias,
+       fig7_tra_qfedavg_aggregation, table2_fairness, fig9_tra_pfedme,
+       fig5_perfedavg_bias]

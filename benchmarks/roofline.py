@@ -1,0 +1,84 @@
+"""Roofline report: aggregates dry-run JSONs into the §Roofline table.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun)
+and emits a markdown table + CSV rows. Run AFTER the dry-run sweep.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_all(mesh: str = "pod", optimized: bool = False):
+    pat = f"{DRYRUN_DIR}/*__{mesh}__*.json" if optimized \
+        else f"{DRYRUN_DIR}/*__{mesh}.json"
+    rows = []
+    for path in sorted(glob.glob(pat)):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+           "bottleneck | useful | peak GiB |\n|" + "---|" * 8)
+    lines = [hdr]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"SKIP | - | - |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"FAIL | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['peak_mem_per_dev']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_report():
+    rows = load_all("pod")
+    if not rows:
+        emit("roofline_report", 0.0, "NO-DRYRUN-DATA(run repro.launch.dryrun)")
+        return
+    ok = [r for r in rows if r.get("ok") and not r.get("skipped")]
+    skipped = [r for r in rows if r.get("skipped")]
+    failed = [r for r in rows if not r.get("ok")]
+    table = markdown_table(rows)
+    with open(os.path.join(RESULTS_DIR, "roofline_pod.md"), "w") as f:
+        f.write(table + "\n")
+    mp = load_all("multipod")
+    if mp:
+        with open(os.path.join(RESULTS_DIR, "roofline_multipod.md"), "w") as f:
+            f.write(markdown_table(mp) + "\n")
+    for mesh in ("pod", "multipod"):
+        opt = load_all(mesh, optimized=True)
+        if opt:
+            with open(os.path.join(RESULTS_DIR,
+                                   f"roofline_{mesh}_opt.md"), "w") as f:
+                f.write(markdown_table(opt) + "\n")
+    bn = {}
+    for r in ok:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    opt_rows = load_all("pod", optimized=True)
+    bn_opt = {}
+    for r in opt_rows:
+        if r.get("ok") and not r.get("skipped"):
+            bn_opt[r["bottleneck"]] = bn_opt.get(r["bottleneck"], 0) + 1
+    emit("roofline_report",
+         sum(r["compile_s"] for r in ok) * 1e6 / max(len(ok), 1),
+         f"ok={len(ok)} skip={len(skipped)} fail={len(failed)} "
+         f"baseline_bottlenecks={bn} optimized_bottlenecks={bn_opt}",
+         {"rows": rows, "multipod_rows": mp, "optimized_rows": opt_rows})
+
+
+ALL = [roofline_report]

@@ -1,0 +1,41 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="LT-FL benchmark suite")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--skip-fl", action="store_true",
+                    help="skip the (slower) federated-learning figures")
+    args = ap.parse_args(argv)
+
+    from benchmarks import beyond, kernel_bench, paper_figures, roofline
+
+    benches = list(kernel_bench.ALL)
+    if not args.skip_fl:
+        benches += list(paper_figures.ALL) + list(beyond.ALL)
+    benches += list(roofline.ALL)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report all, fail at end
+            failures += 1
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s, failures={failures}",
+          file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

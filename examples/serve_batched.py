@@ -1,0 +1,45 @@
+"""Serving example: batched greedy decoding with a KV cache across
+architecture families (dense / MoE / hybrid-SSM / xLSTM).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import decode as D
+from repro.models import transformer as T
+
+BATCH, PROMPT, NEW = 2, 8, 12
+
+for arch in ("qwen1.5-4b", "mixtral-8x22b", "zamba2-7b", "xlstm-350m"):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = D.init_cache(cfg, BATCH, PROMPT + NEW + 1, jnp.float32)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT)),
+                         jnp.int32)
+    step = jax.jit(lambda p, c, t, pos: D.decode_step(cfg, p, t, c, pos))
+    serve = jax.jit(make_serve_step(cfg))
+
+    logits = None
+    for i in range(PROMPT):
+        logits, cache = step(params, cache, prompt[:, i:i + 1], jnp.int32(i))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32).reshape(BATCH, 1)
+    t0 = time.time()
+    out = []
+    for i in range(NEW):
+        nxt, cache = serve(params, cache, {"tokens": tok},
+                           jnp.int32(PROMPT + i))
+        tok = nxt.reshape(BATCH, 1)
+        out.append(nxt)
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(o) for o in out], axis=1)
+    assert np.isfinite(gen).all() and (gen >= 0).all()
+    print(f"{arch:16s} [{cfg.family:6s}] {NEW} tokens x {BATCH} seqs "
+          f"in {dt:5.2f}s -> {gen[0][:8]}")
+print("\nOK: decode path works across families")

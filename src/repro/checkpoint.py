@@ -1,0 +1,51 @@
+"""Sharding-aware pytree checkpointing (orbax not in image).
+
+Leaves are stored in a single ``.npz`` keyed by tree path; restore places
+each leaf onto its target sharding via ``jax.device_put`` so a checkpoint
+written on one mesh can be read onto another (same shapes).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(p)] = np.asarray(leaf)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def load_checkpoint(path: str, like: Any, shardings: Any = None):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    flat_shard = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(paths))
+    for (p, leaf), sh in zip(paths, flat_shard):
+        arr = data[_path_str(p)]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {_path_str(p)}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    step = int(data["__step__"]) if "__step__" in data else None
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step

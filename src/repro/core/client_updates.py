@@ -1,0 +1,161 @@
+"""Client-side local training procedures (thread Client of Algorithm 1).
+
+Every function has signature ``(params, X, Y, hyper) -> (upload, aux)``
+with X: (steps, bs, d), Y: (steps, bs) fixed-shape minibatch tensors, so
+the server can ``vmap`` it across the selected cohort — the whole round is
+one jitted program (and on the production mesh, the client axis shards
+over ``data``; see launch/fl_train.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlp import mlp_loss
+
+
+def _sgd_steps(params, X, Y, lr, loss_fn):
+    def step(p, xy):
+        x, y = xy
+        g = jax.grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda pp, gg: pp - lr * gg, p, g), None
+    return jax.lax.scan(step, params, (X, Y))[0]
+
+
+def fedavg_local(params, X, Y, hyper) -> Tuple[Any, Dict]:
+    """E local epochs of SGD; uploads the new model weights."""
+    loss0 = mlp_loss(params, X.reshape(-1, X.shape[-1]), Y.reshape(-1))
+    new = _sgd_steps(params, X, Y, hyper["lr"], mlp_loss)
+    return new, {"loss0": loss0}
+
+
+def qfedavg_local(params, X, Y, hyper) -> Tuple[Any, Dict]:
+    """q-FedAvg client (Li et al. 2019): F_k at w_t + E epochs of SGD.
+
+    Uploads dw_k = L_lip (w_t - w_k_new); the (F_k, ||dw||) reweighting
+    happens server-side in the fused qfed_reweight kernel."""
+    Xf, Yf = X.reshape(-1, X.shape[-1]), Y.reshape(-1)
+    loss0 = mlp_loss(params, Xf, Yf)
+    new = _sgd_steps(params, X, Y, hyper["lr"], mlp_loss)
+    dw = jax.tree_util.tree_map(
+        lambda a, b: hyper["lipschitz"] * (a - b), params, new)
+    return dw, {"loss0": loss0}
+
+
+def pfedme_local(params, X, Y, hyper) -> Tuple[Any, Dict]:
+    """pFedMe client (Dinh et al. 2020): Moreau-envelope local rounds.
+
+    R local rounds; each round solves min_theta f_i(theta; batch) +
+    lam/2 ||theta - w||^2 with K SGD steps, then w <- w - eta*lam*(w-theta).
+    Uploads the local w. X is consumed as R rounds of K steps."""
+    lam, K, eta, lr = hyper["lam"], hyper["K"], hyper["eta"], hyper["lr"]
+    steps = X.shape[0]
+    R = steps // K
+    loss0 = mlp_loss(params, X.reshape(-1, X.shape[-1]), Y.reshape(-1))
+    Xr = X[: R * K].reshape(R, K, *X.shape[1:])
+    Yr = Y[: R * K].reshape(R, K, *Y.shape[1:])
+
+    def local_round(w, xy):
+        Xk, Yk = xy                      # (K, bs, d) — fixed batch per round
+        def prox_loss(theta, x, y):
+            sq = sum(jnp.sum(jnp.square(a - b)) for a, b in
+                     zip(jax.tree_util.tree_leaves(theta),
+                         jax.tree_util.tree_leaves(w)))
+            return mlp_loss(theta, x, y) + 0.5 * lam * sq
+
+        def inner(theta, xy2):
+            x, y = xy2
+            g = jax.grad(prox_loss)(theta, x, y)
+            return jax.tree_util.tree_map(lambda t, gg: t - lr * gg,
+                                          theta, g), None
+        theta = jax.lax.scan(inner, w, (Xk, Yk))[0]
+        w_new = jax.tree_util.tree_map(
+            lambda ww, tt: ww - eta * lam * (ww - tt), w, theta)
+        return w_new, None
+
+    w_final = jax.lax.scan(local_round, params, (Xr, Yr))[0]
+    return w_final, {"loss0": loss0}
+
+
+def pfedme_personalize(params, X, Y, hyper):
+    """theta_i(w): K proximal steps from the global model — the
+    personalized model used for pFedMe's 'P' evaluation."""
+    lam, lr = hyper["lam"], hyper["lr"]
+
+    def prox_loss(theta, x, y):
+        sq = sum(jnp.sum(jnp.square(a - b)) for a, b in
+                 zip(jax.tree_util.tree_leaves(theta),
+                     jax.tree_util.tree_leaves(params)))
+        return mlp_loss(theta, x, y) + 0.5 * lam * sq
+
+    def inner(theta, xy):
+        x, y = xy
+        g = jax.grad(prox_loss)(theta, x, y)
+        return jax.tree_util.tree_map(lambda t, gg: t - lr * gg, theta, g), None
+
+    return jax.lax.scan(inner, params, (X, Y))[0]
+
+
+def perfedavg_local(params, X, Y, hyper) -> Tuple[Any, Dict]:
+    """Per-FedAvg client (Fallah et al. 2020), first-order MAML:
+    w' = w - a*grad f(w, b1);  w <- w - b*grad f(w', b2)."""
+    a, b = hyper["alpha"], hyper["beta_maml"]
+    steps = X.shape[0] // 2
+    loss0 = mlp_loss(params, X.reshape(-1, X.shape[-1]), Y.reshape(-1))
+    X2 = X[: 2 * steps].reshape(steps, 2, *X.shape[1:])
+    Y2 = Y[: 2 * steps].reshape(steps, 2, *Y.shape[1:])
+
+    def step(w, xy):
+        Xp, Yp = xy
+        g1 = jax.grad(mlp_loss)(w, Xp[0], Yp[0])
+        w_in = jax.tree_util.tree_map(lambda p, g: p - a * g, w, g1)
+        g2 = jax.grad(mlp_loss)(w_in, Xp[1], Yp[1])
+        return jax.tree_util.tree_map(lambda p, g: p - b * g, w, g2), None
+
+    new = jax.lax.scan(step, params, (X2, Y2))[0]
+    return new, {"loss0": loss0}
+
+
+def perfedavg_personalize(params, X, Y, hyper):
+    """One-step adaptation at eval time (the MAML test-time update)."""
+    g = jax.grad(mlp_loss)(params, X.reshape(-1, X.shape[-1]), Y.reshape(-1))
+    return jax.tree_util.tree_map(lambda p, gg: p - hyper["alpha"] * gg,
+                                  params, g)
+
+
+def scaffold_local(params, X, Y, c_global, c_i, hyper):
+    """SCAFFOLD client (Karimireddy et al. 2020, option II).
+
+    Local SGD with variance-reduced gradient g - c_i + c; uploads
+    (dw = w+ - w, dc = c_i+ - c_i) with
+    c_i+ = c_i - c + (w - w+) / (K * lr).
+    """
+    lr = hyper["lr"]
+    K = X.shape[0]
+    loss0 = mlp_loss(params, X.reshape(-1, X.shape[-1]), Y.reshape(-1))
+
+    def step(p, xy):
+        x, y = xy
+        g = jax.grad(mlp_loss)(p, x, y)
+        return jax.tree_util.tree_map(
+            lambda pp, gg, cg, ci: pp - lr * (gg + cg - ci),
+            p, g, c_global, c_i), None
+
+    new = jax.lax.scan(step, params, (X, Y))[0]
+    dw = jax.tree_util.tree_map(lambda a, b: b - a, params, new)
+    ci_new = jax.tree_util.tree_map(
+        lambda ci, cg, w0, w1: ci - cg + (w0 - w1) / (K * lr),
+        c_i, c_global, params, new)
+    dc = jax.tree_util.tree_map(lambda a, b: b - a, c_i, ci_new)
+    return {"dw": dw, "dc": dc}, {"loss0": loss0}
+
+
+LOCAL_FNS = {
+    "fedavg": fedavg_local,
+    "qfedavg": qfedavg_local,
+    "afl": fedavg_local,
+    "pfedme": pfedme_local,
+    "perfedavg": perfedavg_local,
+}

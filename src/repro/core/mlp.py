@@ -1,0 +1,47 @@
+"""The paper's evaluation model: 2-layer MLP (nonconvex, §5 "we only
+consider nonconvex settings") on 60-dim synthetic features, 10 classes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.synthetic_mlp import MLPConfig
+
+
+def mlp_init(key, cfg: MLPConfig = MLPConfig()):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / cfg.d_in) ** 0.5
+    s2 = (2.0 / cfg.d_hidden) ** 0.5
+    return {
+        "w1": s1 * jax.random.normal(k1, (cfg.d_in, cfg.d_hidden)),
+        "b1": jnp.zeros(cfg.d_hidden),
+        "w2": s2 * jax.random.normal(k2, (cfg.d_hidden, cfg.n_classes)),
+        "b2": jnp.zeros(cfg.n_classes),
+    }
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_logits(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def mlp_weighted_loss(params, x, y, w):
+    logits = mlp_logits(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return ((lse - ll) * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def mlp_accuracy(params, x, y, w):
+    """Weighted accuracy; w masks padding. Returns (acc, n_correct, n)."""
+    pred = jnp.argmax(mlp_logits(params, x), axis=-1)
+    correct = ((pred == y) * w).sum()
+    n = jnp.maximum(w.sum(), 1.0)
+    return correct / n, correct, w.sum()

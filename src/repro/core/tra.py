@@ -1,0 +1,99 @@
+"""ThrowRightAway (TRA) — the paper's core protocol (§4, Algorithm 1).
+
+Server side:
+  1. collect 1-bit sufficiency reports (client speed >= threshold),
+  2. select clients REGARDLESS of network condition (vs threshold schemes),
+  3. on upload loss: sufficient clients retransmit (integrity restored);
+     insufficient clients' lost packets are thrown away, coordinates set
+     to ZERO, and the loss recorded,
+  4. aggregation debiases the zero-filled updates (Eq. 1 / variants).
+
+This module is protocol + estimators over *flat* (C, D) client uploads;
+the masked-aggregate inner loop runs in the ``tra_agg`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tra_agg.ops import DEBIAS_MODES, tra_aggregate
+from repro.network.packets import PACKET_FLOATS, n_packets
+from repro.network.trace import ClientNetworks, DEFAULT_THRESHOLD_MBPS
+
+
+@dataclasses.dataclass(frozen=True)
+class TRAConfig:
+    enabled: bool = True
+    loss_rate: float = 0.1            # nominal drop rate r for insufficient
+    debias: str = "group_rate"        # paper-faithful Eq.(1) default
+    packet_floats: int = PACKET_FLOATS
+    threshold_mbps: float = DEFAULT_THRESHOLD_MBPS
+
+    def __post_init__(self):
+        assert self.debias in DEBIAS_MODES, self.debias
+
+
+def sufficiency_report(nets: ClientNetworks,
+                       threshold_mbps: float = DEFAULT_THRESHOLD_MBPS
+                       ) -> np.ndarray:
+    """The client->server 1-bit report (paper: '0 or 1 to indicate
+    insufficient or sufficient')."""
+    return (nets.upload_mbps >= threshold_mbps).astype(np.float32)
+
+
+def simulate_uploads(key, updates: jnp.ndarray, sufficient: jnp.ndarray,
+                     loss_rate, packet_floats: int = PACKET_FLOATS
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Apply per-packet Bernoulli loss to insufficient clients' uploads.
+
+    updates: (C, D); sufficient: (C,) 0/1. Sufficient clients retransmit,
+    so their effective mask is all-ones. Returns (masked (C,D),
+    pkt_mask (C,P), kept_frac (C,))."""
+    C, D = updates.shape
+    P = n_packets(D, packet_floats)
+    u = jax.random.uniform(key, (C, P))
+    lost = (u < loss_rate) & ~sufficient.astype(bool)[:, None]
+    pkt_mask = 1.0 - lost.astype(jnp.float32)                   # (C, P)
+    coord = jnp.repeat(pkt_mask, packet_floats, axis=1)[:, :D]
+    masked = updates * coord
+    kept = coord.mean(axis=1)
+    return masked, pkt_mask, kept
+
+
+def aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
+              weights: jnp.ndarray, sufficient: jnp.ndarray,
+              kept_frac: jnp.ndarray, cfg: TRAConfig) -> jnp.ndarray:
+    """Debiased weighted MEAN of client updates (the FedAvg-style combine).
+
+    For sum-semantics (q-FedAvg's sum of deltas) multiply by weights.sum().
+    """
+    rate = jnp.full(updates.shape[:1], cfg.loss_rate)
+    return tra_aggregate(
+        updates, pkt_mask, weights, mode=cfg.debias, kept_frac=kept_frac,
+        nominal_rate=rate, sufficient=sufficient,
+        packet_floats=cfg.packet_floats)
+
+
+# ---------------------------------------------------------------------------
+# flat <-> pytree helpers for batched (leading-C) client updates
+# ---------------------------------------------------------------------------
+def flatten_clients(tree, n_clients: int) -> jnp.ndarray:
+    """Pytree with leading client dim C on every leaf -> (C, D)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate(
+        [l.reshape(n_clients, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def unflatten_like(vec: jnp.ndarray, template) -> dict:
+    """(D,) -> pytree shaped like ``template`` (no leading client dim)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(np.prod(l.shape))
+        out.append(vec[off:off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: flash-decode attention (one query token vs KV cache).
+
+Decode attention is HBM-bound: the whole KV cache is read once per token.
+This kernel streams the cache in (T_BLK, dh) VMEM tiles with an online-
+softmax accumulator, fusing mask + softmax + PV into one pass — one HBM
+read of K and V, zero materialised (H, T) score tensor.
+
+Grid: (B, KV, T // T_BLK). TPU grids execute sequentially over the last
+axis, so the (m, l, acc) running statistics live in VMEM scratch carried
+across T-blocks; the output tile is written once on the final block.
+GQA is handled by processing all G = H/KV query heads of one KV head per
+grid cell — the (G, dh) q tile and (T_BLK, dh) k tile meet in the MXU as
+a (G, T_BLK) matmul with 128-aligned lanes.
+
+Causal/positional masking arrives as a precomputed additive bias (T,)
+(0 for valid positions, -1e30 beyond ``pos`` / outside the window), which
+keeps scalar plumbing out of the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, b_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, t_blocks):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (T_BLK, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    bias = b_ref[...].astype(jnp.float32)          # (T_BLK,)
+
+    s = q @ k.T * scale + bias[None, :]            # (G, T_BLK)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(t == t_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
+def flash_decode_call(q, k, v, bias, *, t_blk: int = 512,
+                      interpret: bool = True):
+    """q: (B, KV, G, dh); k, v: (B, T, KV, dh); bias: (T,) additive mask.
+
+    Returns (B, KV, G, dh) attention output, f32 accumulation.
+    """
+    B, KV, G, dh = q.shape
+    T = k.shape[1]
+    blk = min(t_blk, T)
+    assert T % blk == 0, (T, blk)
+    t_blocks = T // blk
+    scale = dh ** -0.5
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, t_blocks=t_blocks),
+        grid=(B, KV, t_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk, 1, dh), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((blk,), lambda b, h, t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),      # running max m
+            pltpu.VMEM((G,), jnp.float32),      # running denom l
+            pltpu.VMEM((G, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: flash-decode attention against a KV cache slice.
+
+This is the per-device compute of the decode path once GSPMD has laid the
+cache out (head-parallel or flash layouts, launch/sharding.py). On CPU
+(tests, smoke runs) it executes in interpret mode; the pure-jnp path in
+models/attention.py remains the default for lowering portability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import NEG_INF, flash_decode_call
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def decode_bias(T: int, pos, window=None, is_global=None) -> jnp.ndarray:
+    """(T,) additive mask: 0 for attendable positions, -1e30 otherwise."""
+    idx = jnp.arange(T)
+    valid = idx <= pos
+    if window is not None:
+        local = idx > (pos - window)
+        if is_global is not None:
+            local = local | is_global
+        valid &= local
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_decode(q, k, v, pos, *, window=None, is_global=None,
+                 t_blk: int = 512, use_kernel: bool | None = None):
+    """q: (B,1,H,dh) or (B,H,dh); k,v: (B,T,KV,dh). Returns (B,H,dh) f32."""
+    squeeze = False
+    if q.ndim == 4:
+        q = q[:, 0]
+        squeeze = True
+    B, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    bias = decode_bias(T, pos, window, is_global)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    if use_kernel and T % min(t_blk, T) == 0:
+        interp = jax.default_backend() != "tpu"
+        out = flash_decode_call(qg, k, v, bias, t_blk=t_blk,
+                                interpret=interp)
+    else:
+        out = flash_decode_ref(qg, k, v, bias)
+    return out.reshape(B, H, dh)

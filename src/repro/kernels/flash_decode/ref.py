@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the flash_decode kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k, v, bias):
+    """q: (B,KV,G,dh); k,v: (B,T,KV,dh); bias: (T,) -> (B,KV,G,dh) f32."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    s = s + bias.astype(jnp.float32)[None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: fused per-packet mask application.
+
+The update vector is viewed as (P, F) — P packets of F=256 f32 coords (one
+1 KiB UDP payload per row). The kernel multiplies each packet row by its
+0/1 delivery bit in VMEM, tiled so each grid step streams a (BP, F) tile.
+F=256 keeps the lane dimension a multiple of 128 (VPU-aligned); BP rows
+give (8..512, 256) tiles well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    # x: (BP, F) packet payloads; m: (BP,) delivery bits
+    o_ref[...] = x_ref[...] * m_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def packet_mask_call(x: jnp.ndarray, mask: jnp.ndarray, *,
+                     block_p: int = 64, interpret: bool = True) -> jnp.ndarray:
+    """x: (P, F) float; mask: (P,) float 0/1 -> (P, F)."""
+    P, F = x.shape
+    bp = min(block_p, P)
+    assert P % bp == 0, (P, bp)
+    grid = (P // bp,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, F), lambda i: (i, 0)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, F), x.dtype),
+        interpret=interpret,
+    )(x, mask.astype(x.dtype))

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the packet_mask kernel."""
+import jax.numpy as jnp
+
+
+def packet_mask_ref(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """x: (P, F); mask: (P,) -> (P, F)."""
+    return x * mask.astype(x.dtype)[:, None]

@@ -1,0 +1,35 @@
+"""jit'd wrapper for fused q-FedAvg reweighting over flat updates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qfed_reweight.qfed_reweight import qfed_reweight_call
+from repro.kernels.qfed_reweight.ref import qfed_reweight_ref
+
+
+def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
+                  lipschitz: float, packet_floats: int = 256,
+                  use_kernel: bool | None = None):
+    """dw: (C, D) pseudo-gradients; losses: (C,) client losses F_k (>=0).
+
+    Returns (delta (C, D), h (C,)) per q-FedAvg:
+        delta_k = F_k^q dw_k
+        h_k     = q F_k^(q-1) ||dw_k||^2 + L F_k^q
+    """
+    C, D = dw.shape
+    eps = 1e-10
+    fq = jnp.power(losses + eps, q)
+    P = -(-D // packet_floats)
+    pad = P * packet_floats - D
+    x = jnp.pad(dw, ((0, 0), (0, pad))).reshape(C, P, packet_floats)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    if use_kernel and P % 8 == 0:
+        bp = 16 if P % 16 == 0 else 8
+        interp = jax.default_backend() != "tpu"
+        delta, ssq = qfed_reweight_call(x, fq, block_p=bp, interpret=interp)
+    else:
+        delta, ssq = qfed_reweight_ref(x, fq)
+    h = q * jnp.power(losses + eps, q - 1) * ssq + lipschitz * fq
+    return delta.reshape(C, -1)[:, :D], h

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused q-FedAvg reweighting.
+
+q-FedAvg (Li et al., ICLR 2019) turns each client's pseudo-gradient
+dw = L_lip * (w_t - w_k) into
+    delta_k = F_k^q * dw          (vector)
+    h_k     = q F_k^(q-1) ||dw||^2 + L_lip F_k^q     (scalar)
+
+The kernel fuses the scalar scale and the squared-norm reduction into one
+streaming pass over dw: each grid step reads a (C, BP, F) tile, writes the
+scaled tile, and accumulates per-client partial sum-of-squares into a
+(C, G) output (G = grid size), which ops.py reduces and combines into h_k.
+One HBM read instead of two (scale pass + norm pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dw_ref, fq_ref, delta_ref, ssq_ref):
+    dw = dw_ref[...]                       # (C, BP, F) f32
+    fq = fq_ref[...]                       # (C, 1)
+    delta_ref[...] = dw * fq[..., None]
+    ssq_ref[...] = jnp.sum(dw * dw, axis=(1, 2))[:, None]   # (C, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def qfed_reweight_call(dw: jnp.ndarray, fq: jnp.ndarray, *,
+                       block_p: int = 16, interpret: bool = True):
+    """dw: (C, P, F); fq = F_k^q: (C,).
+
+    Returns (delta (C,P,F) f32, ssq (C,) = ||dw_k||^2)."""
+    C, P, F = dw.shape
+    bp = min(block_p, P)
+    assert P % bp == 0
+    G = P // bp
+    delta, ssq = pl.pallas_call(
+        _kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((C, bp, F), lambda i: (0, i, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, bp, F), lambda i: (0, i, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, P, F), jnp.float32),
+            jax.ShapeDtypeStruct((C, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dw.astype(jnp.float32), fq.astype(jnp.float32)[:, None])
+    return delta, ssq.sum(axis=1)

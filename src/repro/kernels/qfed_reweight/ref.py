@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the qfed_reweight kernel."""
+import jax.numpy as jnp
+
+
+def qfed_reweight_ref(dw, fq):
+    """dw: (C,P,F); fq: (C,) -> (delta (C,P,F), ssq (C,))."""
+    dw = dw.astype(jnp.float32)
+    delta = dw * fq.astype(jnp.float32)[:, None, None]
+    ssq = jnp.sum(dw * dw, axis=(1, 2))
+    return delta, ssq

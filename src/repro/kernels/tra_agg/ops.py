@@ -1,0 +1,72 @@
+"""jit'd wrapper: TRA debiased aggregation over flat client updates.
+
+Debias modes (DESIGN.md §1):
+  per_coord_count  — kernel's native estimator: per-coordinate masked mean.
+  per_client_rate  — client j rescaled by 1/kept_frac_j; implemented by
+                     m'_cj = m_cj / kept_c and den forced to sum(w) via
+                     mask-of-ones weighting.
+  group_rate       — paper Eq. (1) (corrected): insufficient clients scaled
+                     by 1/(1-r) nominal.
+  none             — plain masked weighted mean (biased; for ablation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tra_agg.tra_agg import tra_agg_call
+from repro.kernels.tra_agg.ref import tra_agg_ref
+
+DEBIAS_MODES = ("per_coord_count", "per_client_rate", "group_rate", "none")
+
+
+def _reshape(x, packet_floats):
+    C, D = x.shape
+    P = -(-D // packet_floats)
+    pad = P * packet_floats - D
+    return jnp.pad(x, ((0, 0), (0, pad))).reshape(C, P, packet_floats), P, D
+
+
+def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
+                  weights: jnp.ndarray, *, mode: str = "per_coord_count",
+                  kept_frac=None, nominal_rate=None, sufficient=None,
+                  packet_floats: int = 256,
+                  use_kernel: bool | None = None) -> jnp.ndarray:
+    """updates: (C, D) already masked; pkt_mask: (C, P); weights: (C,).
+
+    Returns the (D,) aggregated update. ``weights`` need not be normalised.
+    """
+    assert mode in DEBIAS_MODES, mode
+    C, D = updates.shape
+    x, P, D = _reshape(updates, packet_floats)
+
+    if mode == "per_coord_count":
+        m, w = pkt_mask, weights
+    elif mode == "per_client_rate":
+        # scale each client by 1/kept, then average with FULL denominator:
+        # out = sum w_c (m_c x_c / kept_c) / sum w_c
+        assert kept_frac is not None
+        x = x / jnp.maximum(kept_frac, 1e-6)[:, None, None]
+        m = jnp.ones_like(pkt_mask)
+        w = weights
+    elif mode == "group_rate":
+        # paper Eq.(1), corrected: insufficient scaled by 1/(1-r)
+        assert nominal_rate is not None and sufficient is not None
+        scale = jnp.where(sufficient.astype(bool), 1.0,
+                          1.0 / jnp.maximum(1.0 - nominal_rate, 1e-6))
+        x = x * scale[:, None, None]
+        m = jnp.ones_like(pkt_mask)
+        w = weights
+    else:  # "none"
+        m = jnp.ones_like(pkt_mask)
+        w = weights
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    if use_kernel and P % 8 == 0:
+        bp = 16 if P % 16 == 0 else 8
+        interp = jax.default_backend() != "tpu"
+        out = tra_agg_call(x, m, w, block_p=bp, interpret=interp)
+    else:
+        out = tra_agg_ref(x, m, w)
+    return out.reshape(-1)[:D]

@@ -1,0 +1,177 @@
+"""Analytic compute/HBM cost model per (arch x input shape x mesh).
+
+WHY ANALYTIC: XLA's ``cost_analysis`` counts ``while`` bodies once
+(see hlo_analysis.py), so for scan-over-layers programs its FLOP/byte
+numbers are off by ~L. Collectives we recover from the HLO with
+trip-count multipliers; compute and HBM traffic we derive here from the
+architecture formulas. Both sources feed the §Roofline tables and are
+cross-checked against ``cost_analysis`` raw values recorded alongside.
+
+All quantities are GLOBAL (whole job); the roofline divides by chip count.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (AUDIO, DENSE, HYBRID, InputShape, MOE,
+                                ModelConfig, SSM, VLM)
+from repro.models.ssm import HEAD_P, mamba_dims
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    proj = 2 * d * dh * (2 * H + 2 * KV)
+    attn = 2 * 2 * H * dh * ctx          # qk^T + pv
+    return proj + attn
+
+
+def _mlp_flops_per_tok(cfg: ModelConfig) -> float:
+    mats = 2 if cfg.mlp_gelu else 3
+    if cfg.is_moe:
+        return 2 * mats * cfg.d_model * cfg.eff_d_ff * cfg.top_k \
+            + 2 * cfg.d_model * cfg.n_experts
+    return 2 * mats * cfg.d_model * cfg.d_ff
+
+
+def _mamba_flops_per_tok(cfg: ModelConfig, chunk: int = 128) -> float:
+    d = cfg.d_model
+    d_in, H, ch = mamba_dims(d, cfg.ssm_expand, cfg.ssm_state, cfg.ssm_conv)
+    N, P, Q = cfg.ssm_state, HEAD_P, chunk
+    proj = 2 * d * (2 * d_in + 2 * N + H) + 2 * d_in * d
+    conv = 2 * cfg.ssm_conv * ch
+    ssd = 2 * Q * N + 2 * Q * H * P + 4 * H * P * N
+    return proj + conv + ssd
+
+
+def _xlstm_flops_per_tok(cfg: ModelConfig) -> float:
+    d, H = cfg.d_model, cfg.n_heads
+    P = d // H
+    proj = 2 * d * (5 * d + 2 * H) + 2 * d * d
+    cell = 6 * H * P * P                 # C update + readout
+    return proj + cell
+
+
+def _layer_flops_per_tok(cfg: ModelConfig, ctx_full: float,
+                         ctx_local: float) -> float:
+    """Average per-layer forward flops per token across the stack."""
+    L = cfg.n_layers
+    if cfg.family in (DENSE, VLM, MOE):
+        if cfg.local_global_pattern:
+            p = cfg.local_global_pattern + 1
+            n_global = L // p
+            n_local = L - n_global
+            a = (n_local * _attn_flops_per_tok(cfg, ctx_local)
+                 + n_global * _attn_flops_per_tok(cfg, ctx_full)) / L
+        elif cfg.sliding_window:
+            a = _attn_flops_per_tok(cfg, ctx_local)
+        else:
+            a = _attn_flops_per_tok(cfg, ctx_full)
+        return a + _mlp_flops_per_tok(cfg)
+    if cfg.family == HYBRID:
+        n_attn = L // cfg.attn_every
+        n_mamba = L
+        f = (n_mamba * _mamba_flops_per_tok(cfg)
+             + n_attn * (_attn_flops_per_tok(cfg, ctx_full)
+                         + _mlp_flops_per_tok(cfg))) / L
+        return f
+    if cfg.family == SSM:
+        return _xlstm_flops_per_tok(cfg)
+    if cfg.family == AUDIO:
+        return _attn_flops_per_tok(cfg, ctx_full) \
+            + _attn_flops_per_tok(cfg, cfg.encoder_seq) \
+            + _mlp_flops_per_tok(cfg)
+    raise ValueError(cfg.family)
+
+
+def flops_global(cfg: ModelConfig, shape: InputShape, *,
+                 remat: bool) -> float:
+    """Total executed flops for one step (train: fwd+bwd+remat)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        ctx = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+        per_tok = _layer_flops_per_tok(cfg, S, ctx) * cfg.n_layers \
+            + 2 * cfg.d_model * cfg.vocab
+        if cfg.family == AUDIO:
+            per_tok += 0  # encoder precomputed into cache
+        return per_tok * B
+    # train / prefill: average causal context S/2 (window: min(W, S/2))
+    ctx_full = S / 2
+    ctx_local = min(cfg.sliding_window or S, S) / 2 \
+        if cfg.sliding_window else ctx_full
+    tokens = B * S
+    per_tok = _layer_flops_per_tok(cfg, ctx_full, ctx_local) * cfg.n_layers
+    per_tok += 2 * cfg.d_model * cfg.vocab           # lm head
+    if cfg.family == AUDIO:
+        enc_tok = B * cfg.encoder_seq
+        enc = (_attn_flops_per_tok(cfg, cfg.encoder_seq / 2)
+               + _mlp_flops_per_tok(cfg)) * cfg.encoder_layers
+        enc_total = enc * enc_tok
+    else:
+        enc_total = 0.0
+    fwd = per_tok * tokens + enc_total
+    if shape.kind == "prefill":
+        return fwd
+    mult = 4.0 if remat else 3.0                      # fwd + 2x bwd (+ remat)
+    return fwd * mult
+
+
+def hbm_bytes_global(cfg: ModelConfig, shape: InputShape, *,
+                     remat: bool, optimizer: str = "adamw") -> float:
+    """Total HBM traffic for one step, summed over devices (global)."""
+    n_params = cfg.n_params()
+    B, S = shape.global_batch, shape.seq_len
+    d, L = cfg.d_model, cfg.n_layers
+    if shape.kind == "decode":
+        # every parameter read once per token step + KV cache traffic
+        p_read = n_params * BF16
+        if cfg.family == SSM:
+            kv = 0.0
+        else:
+            ctx_local = min(S, cfg.sliding_window or S)
+            if cfg.local_global_pattern:
+                p = cfg.local_global_pattern + 1
+                n_glob = L // p
+                ctx_rows = (L - n_glob) * ctx_local + n_glob * S
+            else:
+                ctx_rows = L * ctx_local
+            kv = 2 * B * ctx_rows * cfg.n_kv_heads * cfg.dh * BF16
+        state = 0.0
+        if cfg.family in (SSM, HYBRID):
+            state = n_state_bytes(cfg, B)
+        act = B * d * L * 8 * BF16
+        return p_read + kv + state + act
+    tokens = B * S
+    # params: fwd read + bwd read + grad write (+f32 opt state rd/wr + upd)
+    if shape.kind == "train":
+        opt = 4 * F32 if optimizer == "adamw" else 2 * F32
+        p_traffic = n_params * (2 * BF16 + BF16 + opt + 2 * F32)
+        if remat:
+            p_traffic += n_params * BF16          # extra fwd read
+    else:
+        p_traffic = n_params * BF16
+    # activations: ~12 live (d)-vectors per layer per token each way
+    act_per_tok = 12 * d * L * BF16
+    a_traffic = act_per_tok * tokens * (2.0 if shape.kind == "train" else 1.0)
+    return p_traffic + a_traffic
+
+
+def n_state_bytes(cfg: ModelConfig, B: int) -> float:
+    if cfg.family == HYBRID:
+        d_in, H, ch = mamba_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_state,
+                                 cfg.ssm_conv)
+        return cfg.n_layers * B * H * HEAD_P * cfg.ssm_state * F32 * 2
+    if cfg.family == SSM:
+        P = cfg.d_model // cfg.n_heads
+        return cfg.n_layers * B * cfg.n_heads * P * P * F32 * 2
+    return 0.0
+
+
+def cost_summary(cfg: ModelConfig, shape: InputShape, *, remat: bool
+                 ) -> Dict[str, float]:
+    return {
+        "flops_global": flops_global(cfg, shape, remat=remat),
+        "hbm_bytes_global": hbm_bytes_global(cfg, shape, remat=remat),
+    }

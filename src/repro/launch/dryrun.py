@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import — jax locks the device count on first init.
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import sys            # noqa: E402
+import time           # noqa: E402
+
+from repro.configs.base import ASSIGNED, INPUT_SHAPES  # noqa: E402
+from repro.launch.dryrun_lib import run_combo, save_result  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--sharding", default="auto",
+                    choices=["auto", "megatron", "fsdp", "best"],
+                    help="'best' = fsdp for train/prefill, megatron "
+                         "(head-parallel) for decode — the §Perf winners")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args(argv)
+    tcfg = None
+    if args.microbatch or args.remat != "full":
+        from repro.configs.base import TrainConfig
+        tcfg = TrainConfig(remat=args.remat, microbatch=args.microbatch)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            t0 = time.time()
+            scheme = args.sharding
+            if scheme == "best":
+                scheme = "megatron" if INPUT_SHAPES[shape].kind == "decode" \
+                    else "fsdp"
+            res = run_combo(arch, shape, mesh, mesh_name=args.mesh,
+                            scheme=scheme, tcfg=tcfg)
+            path = save_result(res, args.out)
+            status = ("SKIP: " + res.skipped[:40]) if res.skipped else (
+                "ok" if res.ok else "FAIL: " + (res.error or "")[:120])
+            print(f"[{time.time()-t0:7.1f}s] {arch:24s} {shape:12s} "
+                  f"{args.mesh:8s} {status}", flush=True)
+            if res.ok and not res.skipped:
+                print(f"    flops/dev={res.flops_per_dev:.3e} "
+                      f"hbm/dev={res.hbm_bytes_per_dev:.3e} "
+                      f"peak_mem={res.peak_mem_per_dev/2**30:.2f}GiB "
+                      f"args={res.arg_mem_per_dev/2**30:.2f}GiB", flush=True)
+                print(f"    roofline: compute={res.t_compute*1e3:.2f}ms "
+                      f"memory={res.t_memory*1e3:.2f}ms "
+                      f"collective={res.t_collective*1e3:.2f}ms "
+                      f"-> {res.bottleneck}; useful={res.useful_ratio:.2f}",
+                      flush=True)
+            if not res.ok:
+                failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

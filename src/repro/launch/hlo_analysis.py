@@ -1,0 +1,153 @@
+"""Trip-count-aware collective accounting over partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring
+``known_trip_count`` — fatal for scan-over-layers models where every
+per-layer collective (param all-gather, grad reduce-scatter) lives inside
+the loop body. This module walks the computation graph:
+
+    effective_bytes(op) = bytes(op) * prod(trip_count of enclosing whiles)
+
+using the ``backend_config={"known_trip_count":{"n":...}}`` annotation that
+the partitioner leaves on every scan-derived while op.
+
+Wire-byte model per collective (ring algorithm, per device):
+    all-reduce       2 * size * (n-1)/n
+    all-gather       result * (n-1)/n
+    reduce-scatter   result * (n-1)        (operand = result * n)
+    all-to-all       size * (n-1)/n
+    collective-permute   size
+Shapes in post-SPMD HLO are per-shard, so sizes are per-device quantities.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# header: "%name (params...) -> result {"; params may contain nested parens
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{$")
+_CALL_RE = re.compile(
+    r"(?:calls=|body=|condition=|branch_computations=\{|to_apply=)%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\D+(\d+)")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes_max(tok: str) -> int:
+    """Max element byte-size in a (possibly tuple) shape string — for
+    async -start ops whose result is (operand, result)."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n)
+    return best
+
+
+def _group_size(line: str) -> int:
+    g = _GROUPS_RE.search(line)
+    if g:
+        return len(g.group(1).split(","))
+    g2 = _GROUPS_IOTA_RE.search(line)
+    if g2:
+        return int(g2.group(2))
+    return 1
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _COMP_HDR_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _entry_name(hlo: str) -> str:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                return m.group(1)
+    raise ValueError("no ENTRY computation found")
+
+
+def analyze_collectives(hlo: str) -> Dict:
+    """Returns {by_kind: {...}, wire_bytes, operand_bytes} with while-body
+    collectives multiplied by their known trip counts."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    totals: Dict[str, Dict[str, float]] = {}
+    state = {"wire": 0.0, "operand": 0.0}
+
+    def visit(name: str, mult: float, seen: Tuple[str, ...]):
+        if name not in comps or name in seen:
+            return
+        seen = seen + (name,)
+        for line in comps[name]:
+            cm = _COLL_RE.search(line)
+            if cm:
+                res_tok, kind, is_start = cm.groups()
+                if is_start and "-done" in line:
+                    continue
+                res = _shape_bytes_max(res_tok)
+                n = max(_group_size(line), 1)
+                ring = (n - 1) / n
+                if kind == "all-reduce":
+                    op_b, wire = res, 2 * res * ring
+                elif kind == "all-gather":
+                    op_b, wire = res / n, res * ring
+                elif kind == "reduce-scatter":
+                    op_b, wire = res * n, res * (n - 1)
+                elif kind == "all-to-all":
+                    op_b, wire = res, res * ring
+                else:
+                    op_b, wire = res, res
+                d = totals.setdefault(kind, {
+                    "count": 0.0, "operand_bytes": 0.0,
+                    "result_bytes": 0.0, "wire_bytes": 0.0})
+                d["count"] += mult
+                d["operand_bytes"] += op_b * mult
+                d["result_bytes"] += res * mult
+                d["wire_bytes"] += wire * mult
+                state["wire"] += wire * mult
+                state["operand"] += op_b * mult
+            # recurse into called computations
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            is_while = " while(" in line
+            if is_while and tm:
+                trip = float(tm.group(1))
+            for callee in _CALL_RE.findall(line):
+                # don't multiply the while *condition* by trip count twice;
+                # close enough to multiply both body and cond (cond has no
+                # collectives in practice)
+                visit(callee, mult * (trip if is_while else 1.0), seen)
+
+    visit(entry, 1.0, ())
+    return {"by_kind": totals, "wire_bytes": state["wire"],
+            "operand_bytes": state["operand"]}

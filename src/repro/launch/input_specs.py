@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AUDIO, VLM, InputShape, ModelConfig)
+
+S = jax.ShapeDtypeStruct
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.family == VLM:
+        Lt = L - cfg.n_patches
+        return {
+            "patches": S((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "tokens": S((B, Lt), jnp.int32),
+            "labels": S((B, Lt), jnp.int32),
+        }
+    if cfg.family == AUDIO:
+        return {
+            "frames": S((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+            "tokens": S((B, L), jnp.int32),
+            "labels": S((B, L), jnp.int32),
+        }
+    return {"tokens": S((B, L), jnp.int32), "labels": S((B, L), jnp.int32)}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b = dict(train_inputs(cfg, shape))
+    b.pop("labels")
+    return b
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"tokens": S((B, 1), jnp.int32)}
+
+
+def concrete_like(specs, seed: int = 0):
+    """Materialise small REAL inputs matching a spec dict (smoke tests)."""
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            out[k] = jnp.zeros(v.shape, v.dtype)
+        else:
+            out[k] = jnp.full(v.shape, 0.01, v.dtype)
+    return out

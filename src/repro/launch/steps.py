@@ -1,0 +1,80 @@
+"""Step builders: train_step / prefill_step / serve_step closures.
+
+These are THE functions lowered by the dry-run and executed by the
+launchers; FL integration (TRA masked aggregation across the client axis)
+lives in fl_train.py which wraps make_train_step's gradient path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import decode as decode_mod
+from repro.models import transformer as tf
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    make_optimizer)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    opt = make_optimizer(tcfg.optimizer, tcfg.lr, momentum=tcfg.momentum,
+                         weight_decay=tcfg.weight_decay)
+    remat = tcfg.remat if tcfg.remat != "none" else False
+    mb = max(tcfg.microbatch, 0)
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = tf.forward(cfg, p, batch, remat=remat)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if mb > 1:
+            # gradient accumulation: scan over microbatches (activation
+            # memory / mb at the cost of mb weight-gather rounds)
+            mbatch = jax.tree_util.tree_map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]),
+                batch)
+
+            def acc_fn(carry, b):
+                (loss, metrics), g = grads_of(params, b)
+                carry = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / mb, carry, g)
+                return carry, (loss, metrics)
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(acc_fn, zeros, mbatch)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), metricses)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        if tcfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = jnp.float32(0.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return tf.prefill_logits(cfg, params, batch, remat=True)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: greedy next token against the KV cache."""
+    def serve_step(params, cache, batch, pos):
+        logits, cache = decode_mod.decode_step(cfg, params, batch["tokens"],
+                                               cache, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step

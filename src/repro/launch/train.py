@@ -1,0 +1,87 @@
+"""Generic (non-federated) training launcher.
+
+``python -m repro.launch.train --arch gemma3-27b --reduced --steps 20``
+runs a reduced config on whatever devices exist (CPU smoke / TPU slice);
+full configs expect the production mesh. The FL driver with the paper's
+TRA protocol is launch/fl_train.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import INPUT_SHAPES, TrainConfig, get_config
+from repro.launch import sharding as shard_rules
+from repro.launch.input_specs import concrete_like, train_inputs
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.utils.shardctx import use_rules
+
+
+def synth_batch(cfg, batch: int, seq: int, rng: np.random.Generator):
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)),
+                              jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            0.02 * rng.standard_normal((batch, cfg.n_patches, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            0.02 * rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(lr=args.lr, remat=args.remat)
+    rng = np.random.default_rng(0)
+    params = tf.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    step_fn, opt = make_train_step(cfg, tcfg)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(step_fn)
+
+    seq = args.seq
+    if cfg.family == "vlm":
+        seq = max(seq, cfg.n_patches + 16)
+    for i in range(args.steps):
+        batch = synth_batch(cfg, args.batch,
+                            seq - (cfg.n_patches if cfg.family == "vlm" else 0),
+                            rng)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i:4d} loss={loss:8.4f} "
+              f"gnorm={float(metrics['grad_norm']):7.3f} "
+              f"({time.time()-t0:.2f}s)", flush=True)
+        assert np.isfinite(loss), "loss diverged"
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print("saved", args.checkpoint)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,199 @@
+"""GQA attention: chunked-softmax prefill/train path + KV-cache decode path.
+
+Design notes (TPU adaptation, see DESIGN.md §4):
+
+* Train/prefill uses a **query-chunked** attention: ``lax.scan`` over query
+  blocks with full-precision (f32) softmax. This bounds the live score
+  buffer to ``(B, Cq, H, T)`` instead of ``(B, S, H, S)`` — mandatory for
+  the 32k-prefill input shape.
+* Sliding-window and gemma3-style local:global layers are expressed purely
+  through the mask, parameterised by a per-layer ``is_global`` flag so a
+  single scanned layer body serves both layer kinds.
+* Decode attends one query token against a sequence-sharded KV cache
+  (flash-decode layout): softmax over the sharded T axis is handled by
+  GSPMD with small collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rope_freqs, truncated_normal
+from repro.utils.shardctx import shard
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def attn_init(key, d, n_heads, n_kv, dh, *, qkv_bias=False, dtype=jnp.float32,
+              stack=()):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": truncated_normal(ks[0], (*stack, d, n_heads, dh), dtype=dtype),
+        "wk": truncated_normal(ks[1], (*stack, d, n_kv, dh), dtype=dtype),
+        "wv": truncated_normal(ks[2], (*stack, d, n_kv, dh), dtype=dtype),
+        "wo": truncated_normal(ks[3], (*stack, n_heads, dh, d),
+                               std=0.02 / 2, dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((*stack, n_heads, dh), dtype)
+        p["bk"] = jnp.zeros((*stack, n_kv, dh), dtype)
+        p["bv"] = jnp.zeros((*stack, n_kv, dh), dtype)
+    return p
+
+
+def _project_qkv(p, x, cos, sin, *, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _band_mask(q_pos, k_pos, *, causal, window, is_global):
+    """(Q, T) bool mask. window: int or None. is_global: traced scalar or None."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        local = k_pos[None, :] > (q_pos[:, None] - window)
+        if is_global is not None:   # per-layer flag: global layers see all
+            local = local | is_global
+        m &= local
+    return m
+
+
+# ---------------------------------------------------------------------------
+# chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+def attention(q, k, v, *, causal=True, window=None, is_global=None,
+              q_chunk=512, q_offset=0):
+    """q: (B,S,H,dh)  k,v: (B,T,KV,dh)  ->  (B,S,H,dh).
+
+    Query-chunked with f32 softmax; GQA via head-group reshape.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    nc = max(1, S // q_chunk)
+    C = S // nc
+    assert S % nc == 0, (S, q_chunk)
+
+    qg = q.reshape(B, nc, C, KV, G, dh)
+    k_pos = jnp.arange(T)
+
+    # checkpointed chunk body: the (B,C,H,T) f32 score/prob tensors are
+    # recomputed in backward instead of being stacked across all chunks
+    # (saves ~nc x chunk-probs of live f32 per layer — §Perf iteration 4)
+    @jax.checkpoint
+    def chunk_attn(qc, i):
+        q_pos = q_offset + i * C + jnp.arange(C)
+        s = jnp.einsum("bckgd,btkd->bckgt", qc, k).astype(jnp.float32) * scale
+        mask = _band_mask(q_pos, k_pos, causal=causal, window=window,
+                          is_global=is_global)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bckgt,btkd->bckgd", p.astype(v.dtype), v)
+
+    def body(_, qc_i):
+        qc, i = qc_i                       # (B,C,KV,G,dh), scalar chunk idx
+        return None, chunk_attn(qc, i)
+
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qg, 1, 0), jnp.arange(nc)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, dh)
+    return out
+
+
+def attn_apply(p, x, *, rope_theta, causal=True, window=None, is_global=None,
+               q_chunk=512, positions=None):
+    """Full self-attention over x: (B,S,d)."""
+    B, S, d = x.shape
+    dh = p["wq"].shape[-1]
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_freqs(dh, rope_theta, positions)
+    q, k, v = _project_qkv(p, x, cos, sin)
+    q = shard(q, "batch", "seq", "heads", None)
+    o = attention(q, k, v, causal=causal, window=window, is_global=is_global,
+                  q_chunk=min(q_chunk, S))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(out, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_attn_apply(p, x, kv_src, *, q_chunk=512):
+    """x: (B,S,d) queries; kv_src: (B,T,d) encoder output (no RoPE, no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    o = attention(q, k, v, causal=False, q_chunk=min(q_chunk, x.shape[1]))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode (one token vs KV cache)
+# ---------------------------------------------------------------------------
+def decode_attn_apply(p, x, cache_k, cache_v, pos, *, rope_theta,
+                      window=None, is_global=None):
+    """x: (B,1,d). cache_k/v: (B,T,KV,dh) with valid entries < pos.
+
+    Returns (out (B,1,d), new_k, new_v). The cache T axis is logically
+    ``kv_seq`` (sequence-sharded on the model axis for decode — the
+    flash-decode layout; see DESIGN.md §4).
+    """
+    B, _, d = x.shape
+    dh = p["wq"].shape[-1]
+    T, KV = cache_k.shape[1], cache_k.shape[2]
+    cos, sin = rope_freqs(dh, rope_theta, pos[None])      # (1, dh//2)
+    q, k_new, v_new = _project_qkv(p, x, cos, sin)        # (B,1,H,dh)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    cache_k = shard(cache_k, "batch", "kv_seq", "kv_heads", None)
+    cache_v = shard(cache_v, "batch", "kv_seq", "kv_heads", None)
+
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k).astype(jnp.float32)
+    s = s * (dh ** -0.5)
+    s = shard(s, "batch", "kv_heads", None, "kv_seq")
+    k_pos = jnp.arange(T)
+    valid = k_pos <= pos
+    if window is not None:
+        local = k_pos > (pos - window)
+        if is_global is not None:
+            local = local | is_global
+        valid &= local
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cache_v.dtype), cache_v)
+    o = o.reshape(B, 1, H, dh)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache_k, cache_v
+
+
+def decode_cross_attn_apply(p, x, xk, xv):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    dh = p["wq"].shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])           # (B,1,H,dh)
+    H = q.shape[2]
+    KV = xk.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, xk).astype(jnp.float32) * dh ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pr.astype(xv.dtype), xv).reshape(B, 1, H, dh)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])

@@ -1,0 +1,217 @@
+"""Decode path: cache construction + one-token ``serve_step`` per family.
+
+The KV cache sequence axis carries the logical name ``kv_seq``, mapped to
+the ``model`` mesh axis by the serving rules (flash-decode layout — the
+only layout that shards `long_500k` batch=1, and the natural one for GQA
+with n_kv_heads < mesh model-degree). SSM/hybrid caches are O(1) in seq.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, DENSE, MOE, HYBRID, SSM, VLM, AUDIO
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import mlp_apply, rms_norm
+from repro.models.transformer import (MOE_CAPACITY, _lm_head, hybrid_shape,
+                                      layer_flags)
+from repro.utils.shardctx import shard
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L, KV, dh, d = cfg.n_layers, cfg.n_kv_heads, cfg.dh, cfg.d_model
+    if cfg.family in (DENSE, MOE, VLM):
+        return {
+            "k": jnp.zeros((L, batch, max_seq, KV, dh), dtype),
+            "v": jnp.zeros((L, batch, max_seq, KV, dh), dtype),
+        }
+    if cfg.family == HYBRID:
+        n_super, k, tail = hybrid_shape(cfg)
+        d_in, H, conv_ch = ssm_mod.mamba_dims(d, cfg.ssm_expand,
+                                              cfg.ssm_state, cfg.ssm_conv)
+        c = {
+            "k": jnp.zeros((n_super, batch, max_seq, KV, dh), dtype),
+            "v": jnp.zeros((n_super, batch, max_seq, KV, dh), dtype),
+            "ssm": jnp.zeros((n_super, k, batch, H, ssm_mod.HEAD_P,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((n_super, k, batch, cfg.ssm_conv - 1, conv_ch),
+                              dtype),
+        }
+        if tail:
+            c["ssm_tail"] = jnp.zeros((tail, batch, H, ssm_mod.HEAD_P,
+                                       cfg.ssm_state), jnp.float32)
+            c["conv_tail"] = jnp.zeros((tail, batch, cfg.ssm_conv - 1,
+                                        conv_ch), dtype)
+        return c
+    if cfg.family == SSM:
+        H = cfg.n_heads
+        P = d // H
+        z = lambda *s: jnp.zeros((L, batch, *s), jnp.float32)
+        return {
+            "mlstm_C": z(H, P, P), "mlstm_n": z(H, P),
+            "mlstm_m": jnp.full((L, batch, H), -1e30, jnp.float32),
+            "slstm_c": z(H, P), "slstm_n": z(H, P), "slstm_h": z(H, P),
+            "slstm_m": jnp.full((L, batch, H, P), -1e30, jnp.float32),
+        }
+    if cfg.family == AUDIO:
+        return {
+            "k": jnp.zeros((L, batch, max_seq, KV, dh), dtype),
+            "v": jnp.zeros((L, batch, max_seq, KV, dh), dtype),
+            # precomputed cross-attention K/V over encoder output
+            "xk": jnp.zeros((L, batch, cfg.encoder_seq, KV, dh), dtype),
+            "xv": jnp.zeros((L, batch, cfg.encoder_seq, KV, dh), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tokens: (B,1) int32; pos: scalar int32 (current write position).
+
+    Returns (logits (B, vocab) f32, updated cache).
+    """
+    h = params["embed"][tokens]
+    if cfg.tie_embeddings:
+        h = h * (cfg.d_model ** 0.5)
+    h = h.astype(params["embed"].dtype)
+    h = shard(h, "batch", None, "d_model")
+
+    if cfg.family in (DENSE, MOE, VLM):
+        flags = jnp.asarray(layer_flags(cfg))
+        window = cfg.sliding_window
+
+        def body(h, xs):
+            p, flag, ck, cv = xs
+            is_global = flag.astype(bool) if window is not None else None
+            a, ck, cv = attn.decode_attn_apply(
+                p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), ck, cv, pos,
+                rope_theta=cfg.rope_theta, window=window, is_global=is_global)
+            h = h + a
+            hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+            if "moe" in p:
+                mo, _ = moe_mod.moe_apply(p["moe"], hn, top_k=cfg.top_k,
+                                          capacity_factor=MOE_CAPACITY)
+                h = h + mo
+            else:
+                h = h + mlp_apply(hn, p["mlp"])
+            return h, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], flags, cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == HYBRID:
+        h, cache = _hybrid_decode(cfg, params, h, cache, pos)
+
+    elif cfg.family == SSM:
+        flags = jnp.asarray(layer_flags(cfg))
+
+        def body(h, xs):
+            p, flag, mC, mn, mm, sc, sn, sh, sm = xs
+            hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+
+            def do_s(_):
+                y, (c2, n2, h2, m2) = xlstm_mod.slstm_decode(
+                    p["slstm"], hn, (sc, sn, sh, sm))
+                return y, (mC, mn, mm, c2, n2, h2, m2)
+
+            def do_m(_):
+                y, (C2, n2, m2) = xlstm_mod.mlstm_decode(
+                    p["mlstm"], hn, (mC, mn, mm))
+                return y, (C2, n2, m2, sc, sn, sh, sm)
+
+            y, states = jax.lax.cond(flag.astype(bool), do_s, do_m, None)
+            return h + y, states
+
+        xs = (params["blocks"], flags, cache["mlstm_C"], cache["mlstm_n"],
+              cache["mlstm_m"], cache["slstm_c"], cache["slstm_n"],
+              cache["slstm_h"], cache["slstm_m"])
+        h, states = jax.lax.scan(body, h, xs)
+        cache = dict(zip(("mlstm_C", "mlstm_n", "mlstm_m", "slstm_c",
+                          "slstm_n", "slstm_h", "slstm_m"), states))
+
+    elif cfg.family == AUDIO:
+        def body(h, xs):
+            p, ck, cv, xk, xv = xs
+            a, ck, cv = attn.decode_attn_apply(
+                p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), ck, cv, pos,
+                rope_theta=cfg.rope_theta)
+            h = h + a
+            x = attn.decode_cross_attn_apply(
+                p["xattn"], rms_norm(h, p["norm2"], cfg.norm_eps), xk, xv)
+            h = h + x
+            h = h + mlp_apply(rms_norm(h, p["norm3"], cfg.norm_eps), p["mlp"])
+            return h, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ _lm_head(cfg, params)).astype(jnp.float32)
+    return logits, cache
+
+
+def _hybrid_decode(cfg, params, h, cache, pos):
+    shared = params["shared"]
+
+    def mamba_step(h, xs):
+        p, s_ssm, s_conv = xs
+        y, s_ssm, s_conv = ssm_mod.mamba_decode(
+            p["mamba"], rms_norm(h, p["norm"], cfg.norm_eps), s_ssm, s_conv,
+            state=cfg.ssm_state, conv=cfg.ssm_conv, expand=cfg.ssm_expand)
+        return h + y, (s_ssm, s_conv)
+
+    def super_body(h, xs):
+        p_super, ck, cv, ssm_s, conv_s = xs
+        h, (ssm_s, conv_s) = jax.lax.scan(mamba_step, h,
+                                          (p_super, ssm_s, conv_s))
+        a, ck, cv = attn.decode_attn_apply(
+            shared["attn"], rms_norm(h, shared["norm1"], cfg.norm_eps),
+            ck, cv, pos, rope_theta=cfg.rope_theta)
+        h = h + a
+        h = h + mlp_apply(rms_norm(h, shared["norm2"], cfg.norm_eps),
+                          shared["mlp"])
+        return h, (ck, cv, ssm_s, conv_s)
+
+    xs = (params["blocks"], cache["k"], cache["v"], cache["ssm"],
+          cache["conv"])
+    h, (ks, vs, ssm_s, conv_s) = jax.lax.scan(super_body, h, xs)
+    new = {"k": ks, "v": vs, "ssm": ssm_s, "conv": conv_s}
+    if "tail" in params:
+        h, (ssm_t, conv_t) = jax.lax.scan(
+            mamba_step, h,
+            (params["tail"], cache["ssm_tail"], cache["conv_tail"]))
+        new["ssm_tail"], new["conv_tail"] = ssm_t, conv_t
+    return h, new
+
+
+def prefill_cache_audio(cfg: ModelConfig, params, frames, cache):
+    """Precompute whisper cross-attention K/V from encoder output."""
+    from repro.models.transformer import _whisper_encode
+    enc = _whisper_encode(cfg, params, frames)
+
+    def per_layer(p):
+        k = jnp.einsum("btd,dhk->bthk", enc, p["xattn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc, p["xattn"]["wv"])
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["blocks"])
+    cache = dict(cache)
+    cache["xk"], cache["xv"] = ks.astype(cache["xk"].dtype), vs.astype(cache["xv"].dtype)
+    return cache

@@ -1,0 +1,85 @@
+"""Shared neural-net layers: RMSNorm, RoPE, MLPs, initializers.
+
+All model code is pure-functional: ``params`` are nested dicts of jnp arrays,
+layer params for the decoder stack are STACKED on a leading ``L`` dim and
+consumed via ``lax.scan`` (one compiled layer body — essential for tractable
+XLA compile times of 94-layer configs on the 512-device dry-run mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dh: int, theta: float, positions):
+    """positions: (...,) int32 -> (..., dh//2) cos/sin tables."""
+    half = dh // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, dh); cos/sin: (S, dh//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over head dim: (S, half) -> (S, 1, half)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xr1 = x1 * c - x2 * s
+    xr2 = x2 * c + x1 * s
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x, wi, wg, wo):
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def gelu_mlp(x, wi, wo):
+    return jax.nn.gelu(x @ wi, approximate=True) @ wo
+
+
+def mlp_apply(x, p):
+    if "wg" in p:
+        return swiglu(x, p["wi"], p["wg"], p["wo"])
+    return gelu_mlp(x, p["wi"], p["wo"])
+
+
+def mlp_init(key, d, f, gelu: bool, dtype, stack=()):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": truncated_normal(ks[0], (*stack, d, f), dtype=dtype),
+        "wo": truncated_normal(ks[1], (*stack, f, d), std=0.02 / 2, dtype=dtype),
+    }
+    if not gelu:
+        p["wg"] = truncated_normal(ks[2], (*stack, d, f), dtype=dtype)
+    return p
+
+
+def softmax_cross_entropy(logits, labels, label_mask=None):
+    """logits (..., V) f32-accumulated CE; labels int (...,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if label_mask is not None:
+        loss = loss * label_mask
+        return loss.sum() / jnp.maximum(label_mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,166 @@
+"""Mamba2 (SSD) block — chunked block-matrix form, TPU-adapted.
+
+The CUDA Mamba2 kernel is a warp-specialized selective scan; the TPU-native
+formulation is the *chunked SSD* algorithm: intra-chunk interactions become
+dense (MXU-friendly) matmuls, inter-chunk state is a short ``lax.scan`` over
+chunks. This is the adaptation recorded in DESIGN.md — same math, systolic-
+array-shaped compute.
+
+Single-group GVA layout (B/C shared across heads), as in Zamba2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.utils.shardctx import shard
+
+HEAD_P = 64  # Mamba2 head dim
+
+
+def mamba_dims(d_model: int, expand: int, state: int, conv: int):
+    d_in = expand * d_model
+    n_heads = d_in // HEAD_P
+    conv_ch = d_in + 2 * state
+    return d_in, n_heads, conv_ch
+
+
+def mamba_init(key, d_model, *, expand, state, conv, dtype=jnp.float32, stack=()):
+    d_in, H, conv_ch = mamba_dims(d_model, expand, state, conv)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * state + H      # z, x, B, C, dt
+    return {
+        "in_proj": truncated_normal(ks[0], (*stack, d_model, proj_out), dtype=dtype),
+        "conv_w": truncated_normal(ks[1], (*stack, conv, conv_ch), std=0.1, dtype=dtype),
+        "conv_b": jnp.zeros((*stack, conv_ch), dtype),
+        "A_log": jnp.zeros((*stack, H), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((*stack, H), jnp.float32),
+        "dt_bias": jnp.zeros((*stack, H), jnp.float32),
+        "gate_norm": jnp.zeros((*stack, d_in), dtype),
+        "out_proj": truncated_normal(ks[2], (*stack, d_in, d_model),
+                                     std=0.02 / 2, dtype=dtype),
+    }
+
+
+def _split_proj(p, xz, state, d_in, H):
+    z = xz[..., :d_in]
+    xbc_dt = xz[..., d_in:]
+    xbc = xbc_dt[..., : d_in + 2 * state]
+    dt = xbc_dt[..., d_in + 2 * state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B,S,ch); w: (K,ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, D, chunk=128):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N) single-group; D: (H,). Returns y (B,S,H,P), final state
+    (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = max(1, S // chunk)
+    Q = S // nc
+    assert S % nc == 0
+
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    la = dtr * A                                   # log a_t  (B,nc,Q,H), <=0
+    Lc = jnp.cumsum(la, axis=2)                    # inclusive cumsum in chunk
+
+    # intra-chunk: M[t,s] = exp(Lc_t - Lc_s + la_s? no: decay from s..t) =
+    # exp(Lc_t - Lc_s) for s<=t (state picks up dt_s*x_s AFTER decay at s)
+    diff = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cr, Br)           # (B,nc,Q,Q)
+    M = seg * cb[..., None] * dtr[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xr)
+
+    # chunk-final states: h_c = sum_s exp(Lc_Q - Lc_s) dt_s x_s B_s^T
+    decay_to_end = jnp.exp(Lc[:, :, -1:, :] - Lc)        # (B,nc,Q,H)
+    hc = jnp.einsum("bcqh,bcqhp,bcqn->bchpn",
+                    decay_to_end * dtr, xr, Br)          # (B,nc,H,P,N)
+    a_chunk = jnp.exp(Lc[:, :, -1, :])                   # (B,nc,H)
+
+    def scanf(h, inp):
+        hci, ai = inp
+        h_new = ai[:, :, None, None] * h + hci
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scanf, h0, (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += exp(Lc_t) * C_t . h_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(Lc), Cr, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def mamba_apply(p, x, *, state, conv, expand, chunk=128):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    d_in, H, conv_ch = mamba_dims(d, expand, state, conv)
+    xz = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(p, xz, state, d_in, H)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xi = xbc[..., :d_in].reshape(B, S, H, HEAD_P)
+    Bm = xbc[..., d_in:d_in + state]
+    Cm = xbc[..., d_in + state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xi = shard(xi, "batch", "seq", "heads", None)
+    y, _ = _ssd_chunked(xi.astype(jnp.float32), dt, A,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                        p["D"], chunk=min(chunk, S))
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMSNorm (Mamba2 style)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1 + p["gate_norm"].astype(jnp.float32)))
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p, x, ssm_state, conv_state, *, state, conv, expand):
+    """One-token step. x: (B,1,d); ssm_state: (B,H,P,N) f32;
+    conv_state: (B,conv-1,ch). Returns (y (B,1,d), ssm_state, conv_state)."""
+    B, _, d = x.shape
+    d_in, H, conv_ch = mamba_dims(d, expand, state, conv)
+    xz = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(p, xz, state, d_in, H)          # (B,1,*)
+    window = jnp.concatenate([conv_state, xbc], axis=1)      # (B,conv,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]             # (B,1,ch)
+    new_conv_state = window[:, 1:, :]
+
+    xi = conv_out[..., :d_in].reshape(B, H, HEAD_P).astype(jnp.float32)
+    Bm = conv_out[:, 0, d_in:d_in + state].astype(jnp.float32)   # (B,N)
+    Cm = conv_out[:, 0, d_in + state:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dtv * A)                                     # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtv, xi, Bm)
+    new_state = a[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm) + xi * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in)
+    var = jnp.mean(jnp.square(y), -1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1 + p["gate_norm"].astype(jnp.float32))
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], new_state, new_conv_state

@@ -1,0 +1,368 @@
+"""Config-driven model assembly for all assigned architecture families.
+
+Families:
+  dense / vlm       — GQA attention (+RoPE, optional SWA / local:global) + MLP
+  moe               — GQA attention + top-k expert layer
+  hybrid (zamba2)   — super-blocks of ``attn_every`` Mamba2 layers followed by
+                      one SHARED attention+MLP block (params reused at every
+                      attn position — the Zamba2 design), plus a Mamba tail
+  ssm (xlstm)       — alternating mLSTM / sLSTM blocks (unrolled: 2 param
+                      kinds, small models)
+  audio (whisper)   — transformer encoder over stub frame embeddings +
+                      decoder with cross-attention
+
+Layer stacks are scanned (stacked leading ``L`` dim) so XLA compiles ONE
+block body regardless of depth — required for the 94-layer dry-runs.
+Cross-entropy is computed in sequence chunks to bound the live logits
+buffer (vocab up to 262k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, DENSE, MOE, HYBRID, SSM, VLM, AUDIO
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (mlp_apply, mlp_init, rms_norm,
+                                 softmax_cross_entropy, truncated_normal)
+from repro.utils.shardctx import shard
+
+CE_CHUNK = 512          # seq chunk for chunked cross-entropy
+MOE_CAPACITY = 1.25
+
+
+# ---------------------------------------------------------------------------
+# flags (static per-layer structure)
+# ---------------------------------------------------------------------------
+def layer_flags(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer int flag consumed by the scanned block body.
+
+    dense/vlm: 1 = global-attention layer (gemma3 pattern), else local.
+    ssm:       1 = sLSTM block, 0 = mLSTM.
+    """
+    L = cfg.n_layers
+    if cfg.local_global_pattern:
+        p = cfg.local_global_pattern + 1
+        return np.array([(i % p) == (p - 1) for i in range(L)], np.int32)
+    if cfg.family == SSM:
+        return np.array([(i % cfg.slstm_every) == (cfg.slstm_every - 1)
+                         for i in range(L)], np.int32)
+    return np.ones(L, np.int32)  # full attention everywhere
+
+
+def hybrid_shape(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_super, per_super, tail) decomposition for zamba2-style models."""
+    k = cfg.attn_every
+    n_super = cfg.n_layers // k
+    tail = cfg.n_layers - n_super * k
+    return n_super, k, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    keys = jax.random.split(key, 12)
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    params: Dict[str, Any] = {
+        "embed": truncated_normal(keys[0], (V, d), dtype=dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = truncated_normal(keys[1], (d, V), dtype=dtype)
+
+    def attn_p(k, stack):
+        return attn.attn_init(k, d, cfg.n_heads, cfg.n_kv_heads, cfg.dh,
+                              qkv_bias=cfg.qkv_bias, dtype=dtype, stack=stack)
+
+    if cfg.family in (DENSE, VLM, MOE):
+        blocks = {
+            "attn": attn_p(keys[2], (L,)),
+            "norm1": jnp.zeros((L, d), dtype),
+            "norm2": jnp.zeros((L, d), dtype),
+        }
+        if cfg.family == MOE:
+            blocks["moe"] = moe_mod.moe_init(
+                keys[3], d, cfg.n_experts, cfg.eff_d_ff,
+                gelu=cfg.mlp_gelu, dtype=dtype, stack=(L,))
+        else:
+            blocks["mlp"] = mlp_init(keys[3], d, cfg.d_ff, cfg.mlp_gelu,
+                                     dtype, stack=(L,))
+        params["blocks"] = blocks
+
+    elif cfg.family == HYBRID:
+        n_super, k, tail = hybrid_shape(cfg)
+        mk = lambda kk, stack: {
+            "mamba": ssm_mod.mamba_init(
+                kk, d, expand=cfg.ssm_expand, state=cfg.ssm_state,
+                conv=cfg.ssm_conv, dtype=dtype, stack=stack),
+            "norm": jnp.zeros((*stack, d), dtype),
+        }
+        params["blocks"] = mk(keys[2], (n_super, k))
+        if tail:
+            params["tail"] = mk(keys[3], (tail,))
+        params["shared"] = {
+            "attn": attn_p(keys[4], ()),
+            "mlp": mlp_init(keys[5], d, cfg.d_ff, cfg.mlp_gelu, dtype),
+            "norm1": jnp.zeros((d,), dtype),
+            "norm2": jnp.zeros((d,), dtype),
+        }
+
+    elif cfg.family == SSM:
+        params["blocks"] = {
+            "mlstm": xlstm_mod.mlstm_init(keys[2], d, cfg.n_heads, dtype, (L,)),
+            "slstm": xlstm_mod.slstm_init(keys[3], d, cfg.n_heads, dtype, (L,)),
+            "norm1": jnp.zeros((L, d), dtype),
+        }
+
+    elif cfg.family == AUDIO:
+        Le = cfg.encoder_layers
+        params["encoder"] = {
+            "attn": attn_p(keys[6], (Le,)),
+            "mlp": mlp_init(keys[7], d, cfg.d_ff, cfg.mlp_gelu, dtype, (Le,)),
+            "norm1": jnp.zeros((Le, d), dtype),
+            "norm2": jnp.zeros((Le, d), dtype),
+            "final_norm": jnp.zeros((d,), dtype),
+        }
+        params["blocks"] = {
+            "attn": attn_p(keys[2], (L,)),
+            "xattn": attn_p(keys[8], (L,)),
+            "mlp": mlp_init(keys[3], d, cfg.d_ff, cfg.mlp_gelu, dtype, (L,)),
+            "norm1": jnp.zeros((L, d), dtype),
+            "norm2": jnp.zeros((L, d), dtype),
+            "norm3": jnp.zeros((L, d), dtype),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _ckpt(body, remat):
+    """remat: False/"none" -> plain; True/"full" -> full recompute;
+    "dots" -> save matmul outputs (no weight re-gather in backward)."""
+    if not remat or remat == "none":
+        return body
+    if remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+def _dense_block(cfg: ModelConfig, p, h, flag, *, remat):
+    window = cfg.sliding_window
+    is_global = flag.astype(bool) if (window is not None) else None
+
+    def body(h):
+        a = attn.attn_apply(p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps),
+                            rope_theta=cfg.rope_theta, window=window,
+                            is_global=is_global)
+        h = h + a
+        hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            mo, aux = moe_mod.moe_apply(p["moe"], hn, top_k=cfg.top_k,
+                                        capacity_factor=MOE_CAPACITY)
+            return h + mo, aux["aux_loss"]
+        return h + mlp_apply(hn, p["mlp"]), jnp.float32(0.0)
+
+    body = _ckpt(body, remat)
+    return body(h)
+
+
+def stack_hidden(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+                 remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed inputs and run the full block stack; returns (h, moe_aux)."""
+    h, _ = _embed_inputs(cfg, params, batch)
+    h = shard(h, "batch", "seq", "d_model")
+
+    if cfg.family in (DENSE, VLM, MOE):
+        flags = jnp.asarray(layer_flags(cfg))
+
+        def scan_body(h, xs):
+            p, flag = xs
+            h, aux = _dense_block(cfg, p, h, flag, remat=remat)
+            return h, aux
+
+        h, auxs = jax.lax.scan(scan_body, h, (params["blocks"], flags))
+        moe_aux = auxs.mean()
+
+    elif cfg.family == HYBRID:
+        h, moe_aux = _hybrid_forward(cfg, params, h, remat=remat)
+
+    elif cfg.family == SSM:
+        flags = jnp.asarray(layer_flags(cfg))
+
+        def scan_body(h, xs):
+            p, flag = xs
+
+            def body(h):
+                hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+                y = jax.lax.cond(
+                    flag.astype(bool),
+                    lambda z: xlstm_mod.slstm_apply(p["slstm"], z),
+                    lambda z: xlstm_mod.mlstm_apply(p["mlstm"], z),
+                    hn)
+                return h + y
+
+            body = _ckpt(body, remat)
+            return body(h), None
+
+        h, _ = jax.lax.scan(scan_body, h, (params["blocks"], flags))
+        moe_aux = jnp.float32(0.0)
+
+    elif cfg.family == AUDIO:
+        enc = _whisper_encode(cfg, params, batch["frames"], remat=remat)
+
+        def scan_body(h, p):
+            def body(h):
+                a = attn.attn_apply(p["attn"],
+                                    rms_norm(h, p["norm1"], cfg.norm_eps),
+                                    rope_theta=cfg.rope_theta)
+                h = h + a
+                x = attn.cross_attn_apply(
+                    p["xattn"], rms_norm(h, p["norm2"], cfg.norm_eps), enc)
+                h = h + x
+                return h + mlp_apply(rms_norm(h, p["norm3"], cfg.norm_eps),
+                                     p["mlp"])
+            body = _ckpt(body, remat)
+            return body(h), None
+
+        h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+        moe_aux = jnp.float32(0.0)
+    else:
+        raise ValueError(cfg.family)
+    return h, moe_aux
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+            remat: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Returns (loss, metrics). batch keys per family:
+
+    dense/moe/ssm: tokens (B,S), labels (B,S)
+    vlm:   + patches (B,n_patches,d) prepended
+    audio: frames (B,enc_seq,d) + tokens/labels (B,S)
+    """
+    h, moe_aux = stack_hidden(cfg, params, batch, remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss, metrics = _chunked_ce(cfg, params, h, batch)
+    metrics["moe_aux"] = moe_aux
+    total = loss + 0.01 * moe_aux
+    return total, metrics
+
+
+def _embed_inputs(cfg, params, batch):
+    tokens = batch["tokens"]
+    h = params["embed"][tokens] * (cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0)
+    h = h.astype(params["embed"].dtype)
+    if cfg.family == VLM:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    return h, None
+
+
+def _whisper_encode(cfg, params, frames, *, remat=False):
+    h = frames
+    pe = params["encoder"]
+
+    def scan_body(h, p):
+        def body(h):
+            a = attn.attn_apply(p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps),
+                                rope_theta=cfg.rope_theta, causal=False)
+            h = h + a
+            return h + mlp_apply(rms_norm(h, p["norm2"], cfg.norm_eps), p["mlp"])
+        body = _ckpt(body, remat)
+        return body(h), None
+
+    blocks = {k: v for k, v in pe.items() if k != "final_norm"}
+    h, _ = jax.lax.scan(scan_body, h, blocks)
+    return rms_norm(h, pe["final_norm"], cfg.norm_eps)
+
+
+def _hybrid_forward(cfg, params, h, *, remat=False):
+    n_super, k, tail = hybrid_shape(cfg)
+    shared = params["shared"]
+
+    def mamba_layer(h, p):
+        def body(h):
+            return h + ssm_mod.mamba_apply(
+                p["mamba"], rms_norm(h, p["norm"], cfg.norm_eps),
+                state=cfg.ssm_state, conv=cfg.ssm_conv, expand=cfg.ssm_expand)
+        body = _ckpt(body, remat)
+        return body(h), None
+
+    def shared_block(h):
+        def body(h):
+            a = attn.attn_apply(shared["attn"],
+                                rms_norm(h, shared["norm1"], cfg.norm_eps),
+                                rope_theta=cfg.rope_theta)
+            h = h + a
+            return h + mlp_apply(rms_norm(h, shared["norm2"], cfg.norm_eps),
+                                 shared["mlp"])
+        body = _ckpt(body, remat)
+        return body(h)
+
+    def super_body(h, p_super):
+        h, _ = jax.lax.scan(mamba_layer, h, p_super)
+        return shared_block(h), None
+
+    h, _ = jax.lax.scan(super_body, h, params["blocks"])
+    if tail:
+        h, _ = jax.lax.scan(mamba_layer, h, params["tail"])
+    return h, jnp.float32(0.0)
+
+
+def _lm_head(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def _chunked_ce(cfg, params, h, batch):
+    """Chunked cross-entropy over sequence; only token positions scored."""
+    labels = batch["labels"]
+    if cfg.family == VLM:
+        h = h[:, cfg.n_patches:, :]       # score text positions only
+    B, S, d = h.shape
+    head = _lm_head(cfg, params)
+    nc = max(1, S // CE_CHUNK)
+    while S % nc:
+        nc -= 1
+    C = S // nc
+    hr = jnp.moveaxis(h.reshape(B, nc, C, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+
+    # checkpointed: (B,C,V) f32 logits recomputed in backward, never stacked
+    @jax.checkpoint
+    def chunk_ce(hc, lc):
+        logits = (hc @ head).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (lse - ll).sum()
+
+    def body(acc, xs):
+        hc, lc = xs
+        return acc + chunk_ce(hc, lc), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (hr, lr))
+    loss = tot / (B * S)
+    return loss, {"ce": loss}
+
+
+def prefill_logits(cfg: ModelConfig, params, batch, *, remat=True):
+    """Prefill path for serving: runs the stack, returns last-position
+    logits (B, vocab) f32. Works for every family (audio runs the encoder
+    inside stack_hidden)."""
+    h, _ = stack_hidden(cfg, params, batch, remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = h[:, -1, :]
+    return (last @ _lm_head(cfg, params)).astype(jnp.float32)

@@ -1,0 +1,143 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp gating) + sLSTM (scalar memory).
+
+Recurrences follow arXiv:2405.04517 with the log-domain stabilizer state m.
+Training uses ``lax.scan`` over time (compiled once); decode is the same
+cell applied to a single step with carried (C, n, m) / (c, n, h, m) states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, d, n_heads, dtype=jnp.float32, stack=()):
+    P = d // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": truncated_normal(ks[0], (*stack, d, n_heads, P), dtype=dtype),
+        "wk": truncated_normal(ks[1], (*stack, d, n_heads, P), dtype=dtype),
+        "wv": truncated_normal(ks[2], (*stack, d, n_heads, P), dtype=dtype),
+        "wif": truncated_normal(ks[3], (*stack, d, n_heads, 2), std=0.1,
+                                dtype=dtype),
+        "wog": truncated_normal(ks[4], (*stack, d, n_heads, P), std=0.1,
+                                dtype=dtype),
+        "out": truncated_normal(ks[5], (*stack, d, d), std=0.02 / 2,
+                                dtype=dtype),
+    }
+
+
+def _mlstm_cell(state, qkv_if_o):
+    """state: (C (B,H,P,P), n (B,H,P), m (B,H)); one time step."""
+    C, n, m = state
+    q, k, v, ifg, o = qkv_if_o                 # (B,H,P) x3, (B,H,2), (B,H,P)
+    P = q.shape[-1]
+    it, ft = ifg[..., 0], ifg[..., 1]
+    log_f = -jax.nn.softplus(-ft)              # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    k_s = k / (P ** 0.5)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k_s[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k_s
+    num = jnp.einsum("bhpq,bhq->bhp", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, q)), 1.0)
+    h = jax.nn.sigmoid(o) * num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_proj(p, x):
+    q = jnp.einsum("bsd,dhp->bshp", x, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhp->bshp", x, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhp->bshp", x, p["wv"]).astype(jnp.float32)
+    ifg = jnp.einsum("bsd,dhg->bshg", x, p["wif"]).astype(jnp.float32)
+    o = jnp.einsum("bsd,dhp->bshp", x, p["wog"]).astype(jnp.float32)
+    return q, k, v, ifg, o
+
+
+def mlstm_apply(p, x):
+    """x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H, P = p["wq"].shape[-2:]
+    q, k, v, ifg, o = _mlstm_proj(p, x)
+    init = (jnp.zeros((B, H, P, P), jnp.float32),
+            jnp.zeros((B, H, P), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ifg, o))
+    _, hs = jax.lax.scan(_mlstm_cell, init, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    return h @ p["out"]
+
+
+def mlstm_decode(p, x, state):
+    """x: (B,1,d); state: (C,n,m). Returns (y, new_state)."""
+    B, _, d = x.shape
+    q, k, v, ifg, o = _mlstm_proj(p, x)
+    step = tuple(a[:, 0] for a in (q, k, v, ifg, o))
+    new_state, h = _mlstm_cell(state, step)
+    y = h.reshape(B, 1, d).astype(x.dtype) @ p["out"]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, d, n_heads, dtype=jnp.float32, stack=()):
+    P = d // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # z,i,f,o input projections fused: (d, H, 4P)
+        "win": truncated_normal(ks[0], (*stack, d, n_heads, 4 * P), dtype=dtype),
+        # recurrent per-head: (H, P, 4P)
+        "rec": truncated_normal(ks[1], (*stack, n_heads, P, 4 * P), std=0.1,
+                                dtype=dtype),
+        "out": truncated_normal(ks[2], (*stack, d, d), std=0.02 / 2,
+                                dtype=dtype),
+    }
+
+
+def _slstm_cell(rec, state, zin):
+    """state: (c,n,h,m) each (B,H,P); zin: (B,H,4P) input projection."""
+    c, n, h, m = state
+    P = c.shape[-1]
+    pre = zin + jnp.einsum("bhp,hpq->bhq", h, rec)
+    z, it, ft, o = jnp.split(pre, 4, axis=-1)       # (B,H,P) each
+    z = jnp.tanh(z)
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(p, x):
+    B, S, d = x.shape
+    H = p["rec"].shape[-3]
+    P = d // H
+    zin = jnp.einsum("bsd,dhq->bshq", x, p["win"]).astype(jnp.float32)
+    rec = p["rec"].astype(jnp.float32)
+    zero = jnp.zeros((B, H, P), jnp.float32)
+    init = (zero, zero, zero, jnp.full((B, H, P), -1e30, jnp.float32))
+
+    def step(st, z):
+        return _slstm_cell(rec, st, z)
+
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(zin, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    return h @ p["out"]
+
+
+def slstm_decode(p, x, state):
+    B, _, d = x.shape
+    zin = jnp.einsum("bsd,dhq->bshq", x, p["win"]).astype(jnp.float32)[:, 0]
+    new_state, h = _slstm_cell(p["rec"].astype(jnp.float32), state, zin)
+    y = h.reshape(B, 1, d).astype(x.dtype) @ p["out"]
+    return y, new_state

@@ -1,0 +1,70 @@
+"""Packetizer: model updates <-> fixed-size packets, and lossy transport.
+
+An uploaded update is the flattened parameter vector split into packets of
+``packet_floats`` float32 coordinates (default 256 = 1 KiB payload, the
+granularity at which UDP loss hits the update). Packet loss zeroes whole
+packets and records which packets survived — the "loss record" TRA uses to
+debias aggregation (paper §4).
+
+The hot path (per-packet Bernoulli mask, applied at float granularity) has
+a Pallas TPU kernel in ``repro.kernels.packet_mask``; this module is the
+protocol layer and calls through ``repro.kernels.packet_mask.ops`` which
+dispatches kernel vs jnp reference by backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+PACKET_FLOATS = 256  # 1 KiB of f32 payload per packet
+
+
+def flatten_update(tree) -> Tuple[jnp.ndarray, Callable]:
+    vec, unravel = ravel_pytree(tree)
+    return vec, unravel
+
+
+def n_packets(n_floats: int, packet_floats: int = PACKET_FLOATS) -> int:
+    return -(-n_floats // packet_floats)
+
+
+def pad_to_packets(vec: jnp.ndarray, packet_floats: int = PACKET_FLOATS
+                   ) -> jnp.ndarray:
+    P = n_packets(vec.shape[0], packet_floats)
+    return jnp.pad(vec, (0, P * packet_floats - vec.shape[0]))
+
+
+def sample_packet_mask(key, n_pkts: int, loss_rate) -> jnp.ndarray:
+    """1 = delivered, 0 = lost. loss_rate may be a traced scalar."""
+    return (jax.random.uniform(key, (n_pkts,)) >= loss_rate).astype(jnp.float32)
+
+
+def apply_packet_mask(vec: jnp.ndarray, pkt_mask: jnp.ndarray,
+                      packet_floats: int = PACKET_FLOATS) -> jnp.ndarray:
+    """Zero the coordinates of lost packets. vec: (D,); pkt_mask: (P,)."""
+    from repro.kernels.packet_mask import ops as pm_ops
+    return pm_ops.apply_packet_mask(vec, pkt_mask, packet_floats)
+
+
+def lossy_upload(key, vec: jnp.ndarray, loss_rate,
+                 packet_floats: int = PACKET_FLOATS
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Simulate one TRA upload: returns (masked_vec, pkt_mask, kept_frac).
+
+    kept_frac counts *coordinates* (last packet may be partial)."""
+    D = vec.shape[0]
+    P = n_packets(D, packet_floats)
+    pkt_mask = sample_packet_mask(key, P, loss_rate)
+    masked = apply_packet_mask(vec, pkt_mask, packet_floats)
+    coord_mask = coordinate_mask(pkt_mask, D, packet_floats)
+    kept = coord_mask.mean()
+    return masked, pkt_mask, kept
+
+
+def coordinate_mask(pkt_mask: jnp.ndarray, n_floats: int,
+                    packet_floats: int = PACKET_FLOATS) -> jnp.ndarray:
+    """(P,) packet mask -> (D,) per-coordinate 0/1 mask."""
+    return jnp.repeat(pkt_mask, packet_floats)[:n_floats]

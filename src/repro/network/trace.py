@@ -1,0 +1,75 @@
+"""FCC-calibrated mobile network model (paper §3.1, Fig. 2).
+
+The paper analyses the FCC "Measuring Broadband America" 2019 Q1/Q2 mobile
+trace and reports three calibration points we fit distributions to:
+
+  * 90% of users have packet-loss ratio < 0.1
+  * 76% of users have upload speed > 2 Mbps  (i.e. 24% below)
+  * 51% of users have upload speed > 8 Mbps  (i.e. 49% below)
+
+Upload speed ~ LogNormal(mu, sigma) fitted to the two speed quantiles:
+    P(X < 2) = 0.24  ->  (ln 2 - mu)/sigma = z(0.24) = -0.7063
+    P(X < 8) = 0.49  ->  (ln 8 - mu)/sigma = z(0.49) = -0.0251
+    =>  sigma = ln(4) / (z49 - z24) = 2.0351,  mu = ln 8 - z49*sigma = 2.1305
+Packet loss ~ Exponential(lambda) truncated to [0,1] with
+    P(L < 0.1) = 0.9  ->  lambda = -ln(0.1)/0.1 = 23.026
+
+This gives the *trace-driven* client population used by selection policies
+and by the Fig. 2 benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SPEED_MU = 2.1305
+SPEED_SIGMA = 2.0351
+LOSS_LAMBDA = 23.0259
+DEFAULT_THRESHOLD_MBPS = 2.0   # OpenMined default cited by the paper
+
+
+@dataclasses.dataclass
+class ClientNetworks:
+    """Per-client network conditions (host-side numpy)."""
+    upload_mbps: np.ndarray     # (C,)
+    packet_loss: np.ndarray     # (C,) in [0, 1]
+
+    @property
+    def n(self) -> int:
+        return len(self.upload_mbps)
+
+
+def sample_networks(rng: np.random.Generator, n_clients: int) -> ClientNetworks:
+    speed = rng.lognormal(SPEED_MU, SPEED_SIGMA, n_clients)
+    loss = np.minimum(rng.exponential(1.0 / LOSS_LAMBDA, n_clients), 1.0)
+    return ClientNetworks(speed, loss)
+
+
+def eligible_by_threshold(nets: ClientNetworks,
+                          threshold_mbps: float = DEFAULT_THRESHOLD_MBPS
+                          ) -> np.ndarray:
+    return nets.upload_mbps >= threshold_mbps
+
+
+def eligible_by_ratio(nets: ClientNetworks, ratio: float) -> np.ndarray:
+    """Top-``ratio`` fraction of clients by upload speed (paper's knob:
+    eligible ratios 70/80/90/100%)."""
+    n_eligible = int(round(ratio * nets.n))
+    order = np.argsort(-nets.upload_mbps)
+    mask = np.zeros(nets.n, bool)
+    mask[order[:n_eligible]] = True
+    return mask
+
+
+def upload_seconds(n_bytes: float, mbps: float, loss: float,
+                   retransmit: bool) -> float:
+    """Analytic upload-time model (motivates TRA; used by benchmarks only).
+
+    With retransmission every lost packet is resent (geometric rounds):
+    expected inflation 1/(1-loss). Without (TRA) the client sends once.
+    """
+    base = n_bytes * 8 / (mbps * 1e6)
+    if retransmit and loss < 1.0:
+        return base / (1.0 - loss)
+    return base

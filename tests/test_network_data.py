@@ -1,0 +1,67 @@
+"""Network trace calibration + synthetic data generation properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import generate_synthetic, padded_eval_set
+from repro.network.trace import (sample_networks, upload_seconds,
+                                 eligible_by_threshold)
+
+
+def test_fcc_calibration_quantiles():
+    """Fitted distributions reproduce the paper's Fig.2 statistics."""
+    nets = sample_networks(np.random.default_rng(42), 200_000)
+    loss_under_10 = (nets.packet_loss < 0.1).mean()
+    speed_over_2 = (nets.upload_mbps > 2).mean()
+    speed_over_8 = (nets.upload_mbps > 8).mean()
+    assert abs(loss_under_10 - 0.90) < 0.01      # "90% ... < 0.1"
+    assert abs(speed_over_2 - 0.76) < 0.01       # "76% ... > 2 Mbps"
+    assert abs(speed_over_8 - 0.51) < 0.01       # "51% ... > 8 Mbps"
+
+
+def test_upload_time_tra_vs_retransmit():
+    """TRA removes the retransmission inflation: upload time is the
+    one-shot transfer; retransmission inflates by 1/(1-loss)."""
+    t_retx = upload_seconds(1e6, 2.0, 0.3, retransmit=True)
+    t_tra = upload_seconds(1e6, 2.0, 0.3, retransmit=False)
+    assert abs(t_retx / t_tra - 1 / 0.7) < 1e-9
+
+
+def test_threshold_excludes_slow_clients():
+    nets = sample_networks(np.random.default_rng(0), 10_000)
+    m = eligible_by_threshold(nets, 2.0)
+    assert 0.70 < m.mean() < 0.82
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.0, 2.0), st.floats(0.0, 2.0))
+def test_synthetic_dataset_valid(alpha, beta):
+    data = generate_synthetic(np.random.default_rng(7), n_clients=8,
+                              alpha=alpha, beta=beta)
+    assert data.n_clients == 8
+    for x, y in zip(data.train_x, data.train_y):
+        assert x.shape[1] == 60
+        assert y.min() >= 0 and y.max() < 10
+        assert len(x) == len(y)
+
+
+def test_heterogeneity_grows_with_alpha_beta():
+    """Higher (alpha,beta) => more heterogeneous label distributions."""
+    rng = np.random.default_rng(3)
+
+    def label_spread(a, b):
+        d = generate_synthetic(np.random.default_rng(3), 40, a, b)
+        # per-client majority-class frequency, averaged
+        fr = [np.bincount(y, minlength=10).max() / len(y) for y in d.train_y]
+        return np.mean(fr)
+
+    iid_spread = label_spread(0.0, 0.0)
+    het_spread = label_spread(2.0, 2.0)
+    assert het_spread > iid_spread
+
+
+def test_padded_eval_set_masks():
+    data = generate_synthetic(np.random.default_rng(0), 5, 1, 1)
+    X, Y, W = padded_eval_set(data)
+    assert X.shape[0] == 5 and W.min() >= 0 and W.max() == 1
+    for k in range(5):
+        assert int(W[k].sum()) == len(data.test_x[k])

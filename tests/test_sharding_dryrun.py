@@ -1,0 +1,85 @@
+"""Sharding rules unit tests + an 8-device dry-run smoke (subprocess, since
+this pytest process runs with a single CPU device)."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.sharding import _auto_spec, decode_rules, train_rules
+from repro.utils.shardctx import logical_spec
+
+
+def test_auto_spec_prefers_largest_divisible_dims():
+    s = _auto_spec((94, 4096, 8192), n_stack=1, tp="model", fsdp="data",
+                   tp_size=16, fsdp_size=16)
+    assert s == P(None, "data", "model")
+
+
+def test_auto_spec_replicates_small_leaves():
+    assert _auto_spec((128,), 0, "model", "data", 16, 16) == P()
+
+
+def test_auto_spec_skips_stack_dims():
+    s = _auto_spec((94, 128, 64, 128), n_stack=1, tp="model", fsdp="data",
+                   tp_size=16, fsdp_size=16)
+    assert s[0] is None          # the L dim must never be sharded
+
+
+def test_logical_spec_no_duplicate_axes():
+    rules = {"batch": ("pod", "data"), "heads": "model", "seq": "model"}
+    spec = logical_spec(("batch", "seq", "heads", None), rules)
+    # 'model' must appear once only (first come wins)
+    flat = []
+    for el in spec:
+        if el is None:
+            continue
+        flat.extend(el if isinstance(el, tuple) else [el])
+    assert len(flat) == len(set(flat))
+
+
+def test_rules_shapes():
+    tr = train_rules(multi_pod=True)
+    assert tr["batch"] == ("pod", "data")
+    dr = decode_rules(multi_pod=False, batch_shardable=False)
+    assert dr["batch"] is None
+    assert dr["kv_seq"] == "model"
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_8_devices():
+    """Full dry-run path (lower+compile+roofline) on a forced-8-device CPU
+    in a subprocess; one light arch x shape per step kind."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.launch.dryrun_lib import run_combo
+from repro.launch.mesh import make_smoke_mesh
+mesh = make_smoke_mesh()
+for arch, shape in [("xlstm-350m", "train_4k"),
+                    ("internvl2-2b", "prefill_32k"),
+                    ("xlstm-350m", "long_500k")]:
+    r = run_combo(arch, shape, mesh, mesh_name="smoke")
+    assert r.ok, (arch, shape, r.error)
+    if not r.skipped:
+        assert r.flops_per_dev > 0 and r.t_memory > 0
+        assert r.bottleneck in ("compute", "memory", "collective")
+print("OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900,
+                         env={**__import__("os").environ,
+                              "PYTHONPATH": "src"},
+                         cwd="/root/repo")
+    assert "OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_multipod_mesh_axes():
+    """Mesh factory: names/shape only (no 512-device init here)."""
+    from repro.launch import mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and '"pod", "data", "model"' in src

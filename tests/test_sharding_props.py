@@ -1,0 +1,139 @@
+"""Property tests for the sharding schemes and cost model invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ASSIGNED, INPUT_SHAPES, get_config
+from repro.launch import costmodel
+from repro.launch.sharding import (_fsdp_spec, _megatron_spec,
+                                   trim_batch_axes)
+from repro.models import transformer as tf
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from([1, 2, 16, 20, 64, 128, 256, 4096, 92553]),
+                min_size=1, max_size=4),
+       st.integers(0, 1))
+def test_megatron_spec_divisibility_invariant(shape, n_stack):
+    """Whatever dim gets an axis must divide evenly; stack dims never
+    sharded."""
+    n_stack = min(n_stack, len(shape) - 1)
+    spec = _megatron_spec(["blocks", "attn", "wq"], tuple(shape), n_stack,
+                          16, 16)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        assert i >= n_stack, "stack dim sharded"
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        deg = int(np.prod([16 for _ in axes]))
+        assert shape[i] % deg == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from([256, 1024, 4096, 92553, 151936]),
+                min_size=1, max_size=3))
+def test_fsdp_spec_divisibility(shape):
+    spec = _fsdp_spec(tuple(shape), 0, 16, 16)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        assert shape[i] % (16 ** len(axes)) == 0
+
+
+@pytest.mark.parametrize("B", [1, 32, 128, 256, 512])
+def test_trim_batch_axes_always_divides(B):
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    rules = {"batch": ("pod", "data", "model")}
+    out = trim_batch_axes(rules, mesh, B)
+    b = out["batch"]
+    if b is None:
+        assert B < 2
+        return
+    axes = b if isinstance(b, tuple) else (b,)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    assert B % int(np.prod([sizes[a] for a in axes])) == 0
+
+
+def test_param_specs_cover_all_archs_both_schemes():
+    """Every leaf of every arch gets a VALID spec under both schemes
+    (shapes divide; stack dims unsharded)."""
+    from repro.launch.sharding import param_specs
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda c=cfg: tf.init_params(c, jax.random.PRNGKey(0),
+                                         jnp.bfloat16))
+        for scheme in ("auto", "megatron", "fsdp"):
+            specs = param_specs(cfg, shapes, mesh, scheme=scheme)
+            for (path, leaf), spec in zip(
+                    jax.tree_util.tree_flatten_with_path(shapes)[0],
+                    jax.tree_util.tree_leaves(
+                        specs, is_leaf=lambda x: isinstance(x, P))):
+                for i, ax in enumerate(spec):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    assert leaf.shape[i] % (16 ** len(axes)) == 0, \
+                        (arch, scheme, path, leaf.shape, spec)
+
+
+def test_costmodel_monotone_in_depth_and_tokens():
+    import dataclasses
+    cfg = get_config("stablelm-3b")
+    sh = INPUT_SHAPES["train_4k"]
+    f1 = costmodel.flops_global(cfg, sh, remat=True)
+    f2 = costmodel.flops_global(dataclasses.replace(cfg, n_layers=64), sh,
+                                remat=True)
+    assert f2 > f1
+    sh2 = INPUT_SHAPES["prefill_32k"]
+    # prefill has no bwd: fewer flops per token
+    per_tok_train = f1 / (sh.global_batch * sh.seq_len)
+    per_tok_prefill = costmodel.flops_global(cfg, sh2, remat=True) \
+        / (sh2.global_batch * sh2.seq_len)
+    assert per_tok_prefill < per_tok_train
+
+
+def test_costmodel_decode_memory_dominated_by_params():
+    cfg = get_config("stablelm-3b")
+    sh = INPUT_SHAPES["decode_32k"]
+    b = costmodel.hbm_bytes_global(cfg, sh, remat=False)
+    assert b > cfg.n_params() * 2  # at least one full weight read
+
+
+def test_error_feedback_roundtrip():
+    """EF memory holds exactly the dropped coordinates."""
+    from repro.core.server import FederatedServer, FLConfig
+    from repro.core.tra import TRAConfig
+    from repro.data.synthetic import generate_synthetic
+    from repro.network.trace import ClientNetworks
+    data = generate_synthetic(np.random.default_rng(0), 8, 0.5, 0.5)
+    nets = ClientNetworks(np.full(8, 0.1), np.full(8, 0.05))  # all slow
+    cfg = FLConfig(algo="fedavg", n_rounds=2, clients_per_round=4,
+                   local_steps=4, eval_every=100, error_feedback=True,
+                   selection="all",
+                   tra=TRAConfig(enabled=True, loss_rate=0.5,
+                                 threshold_mbps=2.0))
+    s = FederatedServer(cfg, data, nets)
+    s.run()
+    mem = s._ef_mem
+    assert mem.shape == (8, s._dim)
+    assert np.abs(mem).sum() > 0          # some packets were dropped
+    # memory rows are packet-sparse: each 256-block is all-zero or dense
+    row = mem[np.abs(mem).sum(1).argmax()]
+    P_ = -(-len(row) // 256)
+    blocks = np.pad(row, (0, P_ * 256 - len(row))).reshape(P_, 256)
+    nz = np.abs(blocks).sum(1) > 0
+    frac_mixed = np.mean([0 < (np.abs(b) > 0).mean() < 1.0
+                          for b in blocks[nz][:-1]])
+    assert frac_mixed < 0.5  # dropped packets are whole blocks

@@ -1,0 +1,124 @@
+"""TRA protocol properties: packetizer roundtrip, unbiasedness of the
+debias estimators (analytic, over the mask distribution), upload simulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tra as tra_mod
+from repro.core.tra import TRAConfig, flatten_clients, unflatten_like
+from repro.network import packets
+from repro.network.trace import sample_networks
+
+
+# ---------------------------------------------------------------------------
+# packetizer
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5000))
+def test_coordinate_mask_roundtrip(D):
+    P = packets.n_packets(D)
+    mask = jnp.asarray(np.random.default_rng(D).integers(0, 2, P),
+                       jnp.float32)
+    coord = packets.coordinate_mask(mask, D)
+    assert coord.shape == (D,)
+    # every coordinate inherits exactly its packet's bit
+    for i in [0, D // 2, D - 1]:
+        assert float(coord[i]) == float(mask[i // 256])
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(5),
+            "c": {"d": jnp.zeros((2, 2))}}
+    batched = jax.tree_util.tree_map(lambda l: jnp.stack([l, 2 * l]), tree)
+    flat = flatten_clients(batched, 2)
+    assert flat.shape[0] == 2
+    rec = unflatten_like(flat[1], tree)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(rec[k]),
+                                   2 * np.asarray(tree[k]))
+
+
+def test_lossy_upload_statistics():
+    D = 256 * 200
+    vec = jnp.ones(D)
+    masked, pkt, kept = packets.lossy_upload(
+        jax.random.PRNGKey(0), vec, 0.3)
+    assert abs(float(kept) - 0.7) < 0.05
+    np.testing.assert_allclose(float(masked.mean()), float(kept), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# estimator unbiasedness — ANALYTIC expectation over the mask distribution:
+# E[estimate] computed by replacing each Bernoulli mask with its keep-prob.
+# ---------------------------------------------------------------------------
+def test_group_rate_debias_unbiased_in_expectation():
+    """Paper Eq.(1) corrected: E[W_agg] = weighted mean of true updates
+    when insufficient clients' coords survive w.p. (1-r)."""
+    C, D, r = 4, 512, 0.3
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(C, D)), jnp.float32)
+    suff = jnp.array([1.0, 1.0, 0.0, 0.0])
+    w = jnp.ones(C)
+    # expectation of the masked upload = (1-r)*x for insufficient clients
+    exp_masked = x * jnp.where(suff.astype(bool), 1.0, 1 - r)[:, None]
+    pkt_ones = jnp.ones((C, packets.n_packets(D)))
+    cfg = TRAConfig(loss_rate=r, debias="group_rate")
+    agg = tra_mod.aggregate(exp_masked, pkt_ones, w, suff,
+                            jnp.where(suff.astype(bool), 1.0, 1 - r), cfg)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(x.mean(0)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_per_coord_count_exact_when_losses_known():
+    """per_coord_count averages only over delivering clients: with one
+    client losing a packet, the aggregate over that packet equals the mean
+    of the OTHER clients."""
+    C, D = 3, 512
+    x = jnp.stack([jnp.full(D, 1.0), jnp.full(D, 2.0), jnp.full(D, 6.0)])
+    pkt = jnp.ones((C, 2))
+    pkt = pkt.at[2, 0].set(0.0)          # client 2 lost packet 0
+    masked = x.at[2, :256].set(0.0)
+    cfg = TRAConfig(debias="per_coord_count")
+    agg = tra_mod.aggregate(masked, pkt, jnp.ones(C),
+                            jnp.array([1., 1., 0.]),
+                            pkt.mean(1), cfg)
+    np.testing.assert_allclose(np.asarray(agg[:256]),
+                               np.full(256, 1.5), rtol=1e-5)  # mean(1,2)
+    np.testing.assert_allclose(np.asarray(agg[256:]),
+                               np.full(256, 3.0), rtol=1e-5)  # mean(1,2,6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.05, 0.5), st.integers(2, 6))
+def test_per_client_rate_unbiased_in_expectation(r, C):
+    D = 512
+    rng = np.random.default_rng(C)
+    x = jnp.asarray(rng.normal(size=(C, D)), jnp.float32)
+    suff = jnp.zeros(C)
+    exp_masked = x * (1 - r)
+    pkt_ones = jnp.ones((C, packets.n_packets(D)))
+    cfg = TRAConfig(loss_rate=r, debias="per_client_rate")
+    agg = tra_mod.aggregate(exp_masked, pkt_ones, jnp.ones(C), suff,
+                            jnp.full(C, 1 - r), cfg)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(x.mean(0)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_simulate_uploads_sufficient_clients_lossless():
+    C, D = 4, 2048
+    x = jnp.ones((C, D))
+    suff = jnp.array([1.0, 0.0, 1.0, 0.0])
+    masked, pkt, kept = tra_mod.simulate_uploads(
+        jax.random.PRNGKey(0), x, suff, 0.5)
+    assert float(kept[0]) == 1.0 and float(kept[2]) == 1.0
+    assert float(kept[1]) < 1.0 and float(kept[3]) < 1.0
+    np.testing.assert_allclose(np.asarray(masked[0]), np.ones(D))
+
+
+def test_sufficiency_report_threshold():
+    nets = sample_networks(np.random.default_rng(0), 500)
+    rep = tra_mod.sufficiency_report(nets, 2.0)
+    assert rep.shape == (500,)
+    frac = rep.mean()
+    assert 0.5 < frac < 0.95   # ~76% per the FCC calibration
