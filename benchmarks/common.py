@@ -3,7 +3,8 @@
 CPU-scale reproduction settings: the paper's synthetic datasets with a
 30-client cohort, 10 clients/round. Paper-scale round counts are trimmed
 to keep the single-core CPU budget sane; directional conclusions are the
-validation target (EXPERIMENTS.md compares against the paper's numbers).
+validation target (docs/EXPERIMENTS.md compares against the paper's
+numbers).
 """
 from __future__ import annotations
 
@@ -47,12 +48,13 @@ def networks() -> ClientNetworks:
 def run_fl(algo: str, data: FederatedDataset, *, selection="all", ratio=1.0,
            tra_enabled=False, loss_rate=0.1, debias="group_rate",
            rounds=ROUNDS, q=1.0, seed=0, lr=None,
-           personalized=False) -> Dict[str, float]:
+           personalized=False, engine="scan") -> Dict[str, float]:
     if lr is None:
         lr = 0.05 if algo == "scaffold" else 0.1
     cfg = FLConfig(algo=algo, n_rounds=rounds, clients_per_round=CPR,
                    local_steps=10, eval_every=10 ** 6, seed=seed, q=q, lr=lr,
                    selection=selection, eligible_ratio=ratio,
+                   engine=engine,
                    tra=TRAConfig(enabled=tra_enabled, loss_rate=loss_rate,
                                  debias=debias))
     srv = FederatedServer(cfg, data, networks())
@@ -61,7 +63,8 @@ def run_fl(algo: str, data: FederatedDataset, *, selection="all", ratio=1.0,
     dt = time.time() - t0
     rep = srv.evaluate()
     out = dict(rep.as_dict(), seconds=dt, rounds=rounds,
-               us_per_round=dt / rounds * 1e6)
+               us_per_round=dt / rounds * 1e6,
+               rounds_per_sec=rounds / dt, engine=engine)
     if personalized:
         out["personal"] = srv.evaluate_personalized().as_dict()
     return out

@@ -12,11 +12,13 @@ def main(argv=None) -> None:
                     help="skip the (slower) federated-learning figures")
     args = ap.parse_args(argv)
 
-    from benchmarks import beyond, kernel_bench, paper_figures, roofline
+    from benchmarks import (beyond, engine_bench, kernel_bench,
+                            paper_figures, roofline)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
-        benches += list(paper_figures.ALL) + list(beyond.ALL)
+        benches += list(paper_figures.ALL) + list(beyond.ALL) \
+            + list(engine_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

@@ -1,0 +1,295 @@
+"""Device-resident round-scan engine.
+
+Compiles a *block* of K federated rounds into a single
+``jax.lax.scan`` program so sweeps are bounded by compute, not by
+per-round Python dispatch and host<->device traffic. Everything a round
+needs lives on device for the whole block:
+
+  * client selection     — Gumbel top-k over the eligibility mask
+                           (uniform without replacement over eligible),
+  * PRNG                 — a pure ``fold_in(base_key, t)`` chain keyed on
+                           the absolute round index, so any block
+                           partitioning of the same run replays the same
+                           randomness (replaces the host-side
+                           ``hash((seed, t))`` key derivation),
+  * training data        — pre-staged padded per-client batches
+                           (`data/synthetic.stage_on_device`), sampled
+                           in-scan with per-client ``randint`` bounds,
+  * per-client state     — error-feedback memory, SCAFFOLD ``c_i`` and
+                           AFL ``lambda`` are scan carries, gathered for
+                           the cohort and scattered back each round,
+  * TRA                  — the lossy-upload simulation and debiased
+                           aggregation run fused inside the scan body,
+  * logging              — per-round train loss and selected cohorts are
+                           accumulated in scan outputs and flushed to
+                           host once per block.
+
+``run_single`` jits the *same* step function for one round — that is the
+per-round reference path `FederatedServer.run_round` uses, which is what
+makes the scanned and sequential paths equivalent under a fixed seed
+(see tests/test_engine.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import client_updates as cu
+from repro.core.mlp import mlp_weighted_loss
+from repro.core.tra import flatten_clients, unflatten_like
+from repro.data.synthetic import DeviceDataset, stage_on_device
+from repro.network.packets import n_packets
+
+ENGINE_ALGOS = ("fedavg", "qfedavg", "pfedme", "perfedavg", "afl",
+                "scaffold")
+
+
+class EngineState(NamedTuple):
+    """Scan carry. Unused fields (e.g. ``c_i`` for non-SCAFFOLD algos)
+    are zero-size arrays that ride through the scan untouched."""
+    params: Any           # model pytree
+    ef_mem: jnp.ndarray   # (N, D_up) error-feedback memory, or (0,)
+    c_global: jnp.ndarray  # (D,) SCAFFOLD server variate, or (0,)
+    c_i: jnp.ndarray      # (N, D) SCAFFOLD client variates, or (0,)
+    lam: jnp.ndarray      # (N,) AFL mixture weights (always allocated)
+
+
+def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Uniform sample of ``k`` clients without replacement from the
+    eligible set, entirely on device (Gumbel top-k with uniform
+    weights)."""
+    u = jax.random.uniform(key, eligible.shape, minval=1e-12, maxval=1.0)
+    gumbel = -jnp.log(-jnp.log(u))
+    scores = jnp.where(eligible, gumbel, -jnp.inf)
+    return jax.lax.top_k(scores, k)[1]
+
+
+class RoundScanEngine:
+    """Round-scan executor for one (config, dataset, network) scenario.
+
+    The engine is stateless between calls: callers own the
+    ``EngineState`` and thread it through ``run_block`` / ``run_single``,
+    which is how state survives block boundaries by construction.
+    """
+
+    def __init__(self, cfg, data, sufficient: np.ndarray,
+                 eligible: np.ndarray,
+                 device_data: Optional[DeviceDataset] = None):
+        if cfg.algo not in ENGINE_ALGOS:
+            raise ValueError(f"unsupported algo {cfg.algo!r}")
+        self.cfg = cfg
+        self.dd = device_data if device_data is not None \
+            else stage_on_device(data)
+        self.n_clients = int(self.dd.counts.shape[0])
+        n_eligible = int(np.asarray(eligible).sum())
+        if n_eligible == 0:
+            raise ValueError("no eligible clients")
+        self.cohort = min(cfg.clients_per_round, n_eligible)
+        self.eligible = jnp.asarray(np.asarray(eligible, bool))
+        self.sufficient = jnp.asarray(
+            np.asarray(sufficient, np.float32))
+        step = self._make_step()
+        self._single = jax.jit(step)
+        self._block = jax.jit(
+            lambda state, ts: jax.lax.scan(step, state, ts))
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, params) -> EngineState:
+        cfg = self.cfg
+        N = self.n_clients
+        D = ravel_pytree(params)[0].shape[0]
+        # SCAFFOLD uploads (dw ++ dc) ride one TRA stream, so its EF
+        # memory covers the concatenated 2D vector.
+        up_dim = 2 * D if cfg.algo == "scaffold" else D
+        zero = jnp.zeros((0,), jnp.float32)
+        return EngineState(
+            params=params,
+            ef_mem=jnp.zeros((N, up_dim), jnp.float32)
+            if cfg.error_feedback else zero,
+            c_global=jnp.zeros((D,), jnp.float32)
+            if cfg.algo == "scaffold" else zero,
+            c_i=jnp.zeros((N, D), jnp.float32)
+            if cfg.algo == "scaffold" else zero,
+            lam=jnp.ones((N,), jnp.float32) / N,
+        )
+
+    # -- execution ----------------------------------------------------------
+    def run_single(self, state: EngineState, t: int
+                   ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
+        """One round at absolute index ``t`` (the reference path)."""
+        return self._single(state, jnp.asarray(t, jnp.int32))
+
+    def run_block(self, state: EngineState, t0: int, k: int
+                  ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Scan rounds [t0, t0+k) in one device program; flush logs to
+        host. Returns (state, {"loss": (k,), "ids": (k, C)})."""
+        ts = jnp.arange(t0, t0 + k, dtype=jnp.int32)
+        state, logs = self._block(state, ts)
+        return state, {k_: np.asarray(v) for k_, v in logs.items()}
+
+    # -- scan body ----------------------------------------------------------
+    def _make_step(self):
+        cfg = self.cfg
+        tra_cfg = cfg.tra
+        hyper = cfg.hyper()
+        algo = cfg.algo
+        ef = cfg.error_feedback
+        C, N = self.cohort, self.n_clients
+        dd = self.dd
+        eligible, suff_all = self.eligible, self.sufficient
+        steps, bs = cfg.local_steps, cfg.batch_size
+        base_key = jax.random.PRNGKey(cfg.seed)
+        d_feat = dd.train_x.shape[-1]
+        afl_len = min(64, dd.train_x.shape[1])
+        local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+
+        def step(state: EngineState, t):
+            params = state.params
+            old_vec, _ = ravel_pytree(params)
+            # one threefry invocation covers the whole round: selection
+            # gumbels, batch indices and the TRA packet draws (upload
+            # width is static at trace time, so P is known here)
+            D_model = old_vec.shape[0]
+            D_up = 2 * D_model if algo == "scaffold" else D_model
+            F = tra_cfg.packet_floats
+            P = n_packets(D_up, F)
+            n_batch = C * steps * bs
+            key = jax.random.fold_in(base_key, t)
+            u_all = jax.random.uniform(key, (N + n_batch + C * P,),
+                                       minval=1e-12, maxval=1.0)
+            u_sel = u_all[:N]
+            u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
+            u_tra = u_all[N + n_batch:].reshape(C, P)
+
+            gumbel = -jnp.log(-jnp.log(u_sel))
+            ids = jax.lax.top_k(jnp.where(eligible, gumbel, -jnp.inf),
+                                C)[1]
+            counts = dd.counts[ids]                              # (C,)
+            idx = jnp.minimum((u_idx * counts[:, None, None]
+                               ).astype(jnp.int32), counts[:, None, None] - 1)
+            # direct (client, sample) gather — never materialises the
+            # cohort's full padded datasets inside the scan
+            cid = ids[:, None, None]
+            X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
+            Y = dd.train_y[cid, idx]                 # (C, steps, bs)
+            w = counts.astype(jnp.float32)
+            weights = w / w.sum()
+            suff = suff_all[ids]
+
+            # local training (vmapped cohort)
+            if algo == "scaffold":
+                c_global = unflatten_like(state.c_global, params)
+
+                def loc(p, x, y, ci_vec):
+                    ci = unflatten_like(ci_vec, params)
+                    return cu.scaffold_local(p, x, y, c_global, ci, hyper)
+
+                uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                    params, X, Y, state.c_i[ids])
+                dw = flatten_clients(uploads["dw"], C)
+                dc = flatten_clients(uploads["dc"], C)
+                flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
+            else:
+                uploads, aux = jax.vmap(
+                    lambda p, x, y: local(p, x, y, hyper),
+                    in_axes=(None, 0, 0))(params, X, Y)
+                flat = flatten_clients(uploads, C)               # (C, D)
+
+            # TRA lossy upload + debiased aggregation, fused in-scan:
+            # one pad/reshape into packet space, then the packet mask,
+            # per-mode debias scaling and client weights all fold into a
+            # single einsum — the masked per-client tensor is never
+            # materialised (only error feedback needs it explicitly).
+            if ef:
+                flat = flat + state.ef_mem[ids]
+            pad = P * F - D_up
+            xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
+            if tra_cfg.enabled:
+                lost = (u_tra < tra_cfg.loss_rate) \
+                    & ~suff.astype(bool)[:, None]
+                pkt_mask = 1.0 - lost.astype(jnp.float32)
+            else:
+                pkt_mask = jnp.ones((C, P))
+            new_ef = state.ef_mem.at[ids].set(
+                (xp * (1.0 - pkt_mask[:, :, None])
+                 ).reshape(C, P * F)[:, :D_up]) if ef else state.ef_mem
+
+            debias = tra_cfg.debias
+            if debias == "per_client_rate":
+                # coordinate-weighted kept fraction (last packet partial)
+                pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
+                kept = (pkt_mask @ pcnt) / D_up
+
+            def fused_agg(w, mult=None):
+                """Debiased weighted aggregate of the (implicitly)
+                masked uploads: einsum(xp, pkt_mask * per-client scale)
+                over the cohort, normalised per debias mode. Mirrors
+                kernels/tra_agg/ops.py DEBIAS_MODES — keep in sync."""
+                q_c = w if mult is None else w * mult
+                if debias == "per_client_rate":
+                    q_c = q_c / jnp.maximum(kept, 1e-6)
+                elif debias == "group_rate":
+                    q_c = q_c * jnp.where(
+                        suff.astype(bool), 1.0,
+                        1.0 / jnp.maximum(1.0 - tra_cfg.loss_rate, 1e-6))
+                wm = pkt_mask * q_c[:, None]
+                if debias == "per_coord_count":
+                    den = jnp.maximum((pkt_mask * w[:, None]).sum(0),
+                                      1e-12)[:, None]
+                else:
+                    den = jnp.maximum(w.sum(), 1e-12)
+                out = jnp.einsum("cpf,cp->pf", xp, wm) / den
+                return out.reshape(-1)[:D_up]
+
+            # server update per algorithm
+            c_global_new, c_i_new, lam_new = \
+                state.c_global, state.c_i, state.lam
+            if algo == "scaffold":
+                agg = fused_agg(weights)
+                D = dw.shape[1]
+                dw_agg, dc_agg = agg[:D], agg[D:]
+                new_vec = old_vec + dw_agg
+                c_global_new = state.c_global + (C / N) * dc_agg
+                c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
+            elif algo == "qfedavg":
+                # delta_k = F_k^q dw_k;  h_k = q F^(q-1)||dw||^2 + L F^q
+                eps = 1e-10
+                fq = jnp.power(aux["loss0"] + eps, cfg.q)
+                ssq = jnp.einsum("cpf,cp->c", xp * xp, pkt_mask)
+                h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
+                    * ssq + cfg.lipschitz * fq
+                # debiased SUM of deltas = debiased mean * C
+                agg = fused_agg(jnp.ones(C), mult=fq) * C
+                new_vec = old_vec - agg / jnp.maximum(h.sum(), 1e-8)
+            elif algo == "afl":
+                new_vec = fused_agg(state.lam[ids])
+            elif algo == "pfedme":
+                new_vec = (1 - cfg.pfedme_beta) * old_vec \
+                    + cfg.pfedme_beta * fused_agg(weights)
+            else:  # fedavg / perfedavg: weighted mean of uploaded models
+                new_vec = fused_agg(weights)
+            new_params = unflatten_like(new_vec, params)
+
+            if algo == "afl":
+                # projected gradient ascent on client losses (minimax),
+                # on the staged data with a padding mask
+                Xe = dd.train_x[ids, :afl_len]
+                Ye = dd.train_y[ids, :afl_len]
+                msk = (jnp.arange(afl_len)[None, :]
+                       < counts[:, None]).astype(jnp.float32)
+                losses = jax.vmap(mlp_weighted_loss,
+                                  in_axes=(None, 0, 0, 0))(
+                    new_params, Xe, Ye, msk)
+                lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
+                lam = jnp.maximum(lam, 0.0)
+                lam_new = lam / lam.sum()
+
+            new_state = EngineState(new_params, new_ef, c_global_new,
+                                    c_i_new, lam_new)
+            return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
+
+        return step

@@ -1,9 +1,13 @@
 """Federated server orchestration (thread Server of Algorithm 1).
 
-One *round* is a single jitted program:
-    broadcast w_t -> vmapped local training over the cohort ->
-    simulated lossy uploads (TRA) or reliable uploads (threshold mode) ->
-    debiased aggregation -> w_{t+1}.
+Execution is delegated to the device-resident round-scan engine
+(`core/engine.py`): the whole round — on-device client selection,
+vmapped local training over the cohort, simulated lossy uploads (TRA)
+or reliable uploads (threshold mode), debiased aggregation — is one
+compiled step, and ``run`` scans *blocks* of rounds in a single device
+program, flushing loss logs at evaluation boundaries. ``run_round``
+executes the same step once per call (the per-round reference path),
+so the two paths are fixed-seed equivalent (tests/test_engine.py).
 
 Selection policies (the paper's comparison axis):
   "all"        every client eligible (TRA's fair selection)
@@ -14,8 +18,7 @@ Selection policies (the paper's comparison axis):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +26,15 @@ import numpy as np
 
 from repro.core import client_updates as cu
 from repro.core import tra as tra_mod
+from repro.core.engine import RoundScanEngine
 from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
-from repro.core.tra import TRAConfig, flatten_clients, unflatten_like
+from repro.core.tra import TRAConfig
 from repro.data.synthetic import (FederatedDataset, padded_eval_set,
                                   sample_batches)
-from repro.kernels.qfed_reweight.ops import qfed_reweight
 from repro.network.trace import (ClientNetworks, eligible_by_ratio,
-                                 eligible_by_threshold, sample_networks)
+                                 eligible_by_threshold,
+                                 eligible_mask_device, sample_networks)
 
 
 @dataclasses.dataclass
@@ -48,7 +52,8 @@ class FLConfig:
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps
     # our pseudo-gradients are ~10x larger, over-damping h — L=1.0
-    # restores the paper's convergence/fairness behaviour (see EXPERIMENTS).
+    # restores the paper's convergence/fairness behaviour (see
+    # docs/EXPERIMENTS.md).
     lipschitz: float = 1.0
     pfedme_lam: float = 15.0
     pfedme_K: int = 5
@@ -63,6 +68,10 @@ class FLConfig:
     error_feedback: bool = False
     seed: int = 0
     eval_every: int = 10
+    # "scan" compiles blocks of rounds into one lax.scan program;
+    # "per_round" dispatches the same compiled step once per round
+    # (reference path, also what run_round uses).
+    engine: str = "scan"
 
     def hyper(self) -> Dict[str, float]:
         return {
@@ -88,26 +97,52 @@ class FederatedServer:
 
     def __init__(self, cfg: FLConfig, data: FederatedDataset,
                  nets: Optional[ClientNetworks] = None):
+        if cfg.engine not in ("scan", "per_round"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
         self.cfg = cfg
         self.data = data
         self.rng = np.random.default_rng(cfg.seed)
         self.nets = nets if nets is not None else sample_networks(
             self.rng, data.n_clients)
-        self.params = mlp_init(jax.random.PRNGKey(cfg.seed))
         self.sufficient = tra_mod.sufficiency_report(
             self.nets, cfg.tra.threshold_mbps)
         self.eval_X, self.eval_Y, self.eval_W = padded_eval_set(data)
-        from jax.flatten_util import ravel_pytree
-        self._dim = ravel_pytree(self.params)[0].shape[0]
-        self._ef_mem = np.zeros((data.n_clients, self._dim), np.float32)
-        # SCAFFOLD control variates (server c + per-client c_i)
-        self._c_global = np.zeros(self._dim, np.float32)
-        self._c_i = np.zeros((data.n_clients, self._dim), np.float32)
-        self._round_fn = self._build_scaffold_round_fn() \
-            if cfg.algo == "scaffold" else self._build_round_fn()
+        elig = eligible_mask_device(
+            jnp.asarray(self.nets.upload_mbps), cfg.selection,
+            eligible_ratio=cfg.eligible_ratio,
+            threshold_mbps=cfg.tra.threshold_mbps)
+        self.engine = RoundScanEngine(cfg, data, self.sufficient,
+                                      np.asarray(elig))
+        self._state = self.engine.init_state(
+            mlp_init(jax.random.PRNGKey(cfg.seed)))
         self._eval_fn = jax.jit(jax.vmap(mlp_accuracy, in_axes=(None, 0, 0, 0)))
-        self._lambda = np.ones(data.n_clients) / data.n_clients  # AFL state
         self.history: List[RoundLog] = []
+
+    # -- device-resident state, host views ----------------------------------
+    @property
+    def params(self):
+        return self._state.params
+
+    @property
+    def _dim(self) -> int:
+        from jax.flatten_util import ravel_pytree
+        return ravel_pytree(self.params)[0].shape[0]
+
+    @property
+    def _ef_mem(self) -> np.ndarray:
+        return np.asarray(self._state.ef_mem)
+
+    @property
+    def _c_global(self) -> np.ndarray:
+        return np.asarray(self._state.c_global)
+
+    @property
+    def _c_i(self) -> np.ndarray:
+        return np.asarray(self._state.c_i)
+
+    @property
+    def _lambda(self) -> np.ndarray:
+        return np.asarray(self._state.lam)  # AFL state
 
     # -- selection ---------------------------------------------------------
     def eligible_mask(self) -> np.ndarray:
@@ -121,140 +156,16 @@ class FederatedServer:
         raise ValueError(cfg.selection)
 
     def select(self) -> np.ndarray:
+        """Host-side reference sampler (the engine selects on device)."""
         elig = np.flatnonzero(self.eligible_mask())
         n = min(self.cfg.clients_per_round, len(elig))
         return self.rng.choice(elig, n, replace=False)
 
-    # -- jitted round ------------------------------------------------------
-    def _build_round_fn(self) -> Callable:
-        cfg = self.cfg
-        local = cu.LOCAL_FNS[cfg.algo]
-        hyper = cfg.hyper()
-        tra_cfg = cfg.tra
-
-        ef = cfg.error_feedback
-
-        @jax.jit
-        def round_fn(params, X, Y, weights, sufficient, lam_sel, key,
-                     ef_mem):
-            C = X.shape[0]
-            uploads, aux = jax.vmap(
-                lambda p, x, y: local(p, x, y, hyper),
-                in_axes=(None, 0, 0))(params, X, Y)
-            flat = flatten_clients(uploads, C)                      # (C, D)
-            if ef:
-                flat = flat + ef_mem
-            if tra_cfg.enabled:
-                masked, pkt_mask, kept = tra_mod.simulate_uploads(
-                    key, flat, sufficient, tra_cfg.loss_rate,
-                    tra_cfg.packet_floats)
-            else:
-                P = -(-flat.shape[1] // tra_cfg.packet_floats)
-                masked, kept = flat, jnp.ones(C)
-                pkt_mask = jnp.ones((C, P))
-            new_mem = (flat - masked) if ef else ef_mem
-
-            if cfg.algo == "qfedavg":
-                # uploads are dw_k; reweight (fused kernel) then debias sum
-                delta, h = qfed_reweight(masked, aux["loss0"], cfg.q,
-                                         cfg.lipschitz,
-                                         tra_cfg.packet_floats)
-                # debiased SUM of deltas = debiased mean * C
-                agg = tra_mod.aggregate(delta, pkt_mask, jnp.ones(C),
-                                        sufficient, kept, tra_cfg) * C
-                step = agg / jnp.maximum(h.sum(), 1e-8)
-                from jax.flatten_util import ravel_pytree
-                old_vec, _ = ravel_pytree(params)
-                new_vec = old_vec - step
-            elif cfg.algo == "afl":
-                agg = tra_mod.aggregate(masked, pkt_mask, lam_sel,
-                                        sufficient, kept, tra_cfg)
-                new_vec = agg
-            elif cfg.algo == "pfedme":
-                agg = tra_mod.aggregate(masked, pkt_mask, weights,
-                                        sufficient, kept, tra_cfg)
-                from jax.flatten_util import ravel_pytree
-                old_vec, _ = ravel_pytree(params)
-                new_vec = (1 - cfg.pfedme_beta) * old_vec \
-                    + cfg.pfedme_beta * agg
-            else:  # fedavg / perfedavg: weighted mean of uploaded models
-                new_vec = tra_mod.aggregate(masked, pkt_mask, weights,
-                                            sufficient, kept, tra_cfg)
-            new_params = unflatten_like(new_vec, params)
-            return new_params, aux["loss0"].mean(), new_mem
-
-        return round_fn
-
-    def _build_scaffold_round_fn(self) -> Callable:
-        """SCAFFOLD round: variance-reduced locals; (dw ++ dc) rides ONE
-        TRA upload stream (both halves packet-masked + debiased)."""
-        cfg = self.cfg
-        hyper = cfg.hyper()
-        tra_cfg = cfg.tra
-        N = self.data.n_clients
-
-        @jax.jit
-        def round_fn(params, X, Y, weights, sufficient, key,
-                     c_global_vec, c_i_sel):
-            C = X.shape[0]
-            c_global = unflatten_like(c_global_vec, params)
-
-            def local(p, x, y, ci_vec):
-                ci = unflatten_like(ci_vec, params)
-                return cu.scaffold_local(p, x, y, c_global, ci, hyper)
-
-            uploads, aux = jax.vmap(local, in_axes=(None, 0, 0, 0))(
-                params, X, Y, c_i_sel)
-            dw = flatten_clients(uploads["dw"], C)
-            dc = flatten_clients(uploads["dc"], C)
-            both = jnp.concatenate([dw, dc], axis=1)        # (C, 2D)
-            if tra_cfg.enabled:
-                masked, pkt_mask, kept = tra_mod.simulate_uploads(
-                    key, both, sufficient, tra_cfg.loss_rate,
-                    tra_cfg.packet_floats)
-            else:
-                P = -(-both.shape[1] // tra_cfg.packet_floats)
-                masked, kept = both, jnp.ones(C)
-                pkt_mask = jnp.ones((C, P))
-            agg = tra_mod.aggregate(masked, pkt_mask, weights, sufficient,
-                                    kept, tra_cfg)
-            dw_agg, dc_agg = agg[:dw.shape[1]], agg[dw.shape[1]:]
-            from jax.flatten_util import ravel_pytree
-            w_vec, _ = ravel_pytree(params)
-            new_params = unflatten_like(w_vec + dw_agg, params)
-            c_new = c_global_vec + (C / N) * dc_agg
-            c_i_new = c_i_sel + dc                           # kept locally
-            return new_params, aux["loss0"].mean(), c_new, c_i_new
-
-        return round_fn
-
     # -- public API ---------------------------------------------------------
     def run_round(self, t: int) -> RoundLog:
         cfg = self.cfg
-        ids = self.select()
-        X, Y = sample_batches(self.rng, self.data, ids, cfg.local_steps,
-                              cfg.batch_size)
-        w = self.data.samples_per_client[ids].astype(np.float32)
-        suff = jnp.asarray(self.sufficient[ids])
-        lam_sel = jnp.asarray(self._lambda[ids].astype(np.float32))
-        key = jax.random.PRNGKey(hash((cfg.seed, t)) % (2 ** 31))
-        if cfg.algo == "scaffold":
-            self.params, loss, c_new, ci_new = self._round_fn(
-                self.params, jnp.asarray(X), jnp.asarray(Y),
-                jnp.asarray(w / w.sum()), suff, key,
-                jnp.asarray(self._c_global), jnp.asarray(self._c_i[ids]))
-            self._c_global = np.asarray(c_new)
-            self._c_i[ids] = np.asarray(ci_new)
-        else:
-            self.params, loss, new_mem = self._round_fn(
-                self.params, jnp.asarray(X), jnp.asarray(Y),
-                jnp.asarray(w / w.sum()), suff, lam_sel, key,
-                jnp.asarray(self._ef_mem[ids]))
-            if cfg.error_feedback:
-                self._ef_mem[ids] = np.asarray(new_mem)
-        if cfg.algo == "afl":
-            self._afl_lambda_step(ids)
-        log = RoundLog(t, float(loss))
+        self._state, ys = self.engine.run_single(self._state, t)
+        log = RoundLog(t, float(ys["loss"]))
         if (t + 1) % cfg.eval_every == 0 or t == cfg.n_rounds - 1:
             log.report = self.evaluate()
             if cfg.algo in ("pfedme", "perfedavg"):
@@ -263,20 +174,28 @@ class FederatedServer:
         return log
 
     def run(self) -> List[RoundLog]:
-        for t in range(self.cfg.n_rounds):
-            self.run_round(t)
+        cfg = self.cfg
+        if cfg.engine == "per_round":
+            for t in range(cfg.n_rounds):
+                self.run_round(t)
+            return self.history
+        # scanned blocks, cut at evaluation boundaries
+        t = 0
+        while t < cfg.n_rounds:
+            t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
+                     cfg.n_rounds)
+            self._state, logs = self.engine.run_block(self._state, t,
+                                                      t1 - t)
+            for i, loss in enumerate(logs["loss"]):
+                self.history.append(RoundLog(t + i, float(loss)))
+            last = t1 - 1
+            if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
+                self.history[-1].report = self.evaluate()
+                if cfg.algo in ("pfedme", "perfedavg"):
+                    self.history[-1].personalized = \
+                        self.evaluate_personalized()
+            t = t1
         return self.history
-
-    def _afl_lambda_step(self, ids):
-        # projected gradient ascent on client losses (AFL minimax)
-        from repro.core.mlp import mlp_loss as _l
-        for k in ids:
-            x = jnp.asarray(self.data.train_x[k][:64])
-            y = jnp.asarray(self.data.train_y[k][:64])
-            self._lambda[k] += self.cfg.afl_lr_lambda * float(
-                _l(self.params, x, y))
-        lam = np.maximum(self._lambda, 0)
-        self._lambda = lam / lam.sum()
 
     # -- evaluation ----------------------------------------------------------
     def evaluate(self, params=None) -> FairnessReport:

@@ -23,6 +23,39 @@ D_FEAT = 60
 N_CLASSES = 10
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceDataset:
+    """Device-resident training data for the round-scan engine: every
+    client's train set padded to a common length so a scanned round can
+    gather fixed-shape minibatches with per-client ``randint`` bounds
+    (no host round-trip per round)."""
+    train_x: "jnp.ndarray"   # (N, M, D_FEAT) zero-padded
+    train_y: "jnp.ndarray"   # (N, M) zero-padded
+    counts: "jnp.ndarray"    # (N,) int32 true samples per client
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.counts.shape[0])
+
+
+def stage_on_device(data: "FederatedDataset") -> DeviceDataset:
+    """Pad per-client train sets to max length and push them to device
+    once per run. Batch indices are drawn in [0, counts[k]) in-scan, so
+    the padding is never sampled."""
+    import jax.numpy as jnp
+    N = data.n_clients
+    counts = data.samples_per_client
+    M = int(counts.max())
+    X = np.zeros((N, M, D_FEAT), np.float32)
+    Y = np.zeros((N, M), np.int32)
+    for k in range(N):
+        n = counts[k]
+        X[k, :n] = data.train_x[k]
+        Y[k, :n] = data.train_y[k]
+    return DeviceDataset(jnp.asarray(X), jnp.asarray(Y),
+                         jnp.asarray(counts.astype(np.int32)))
+
+
 @dataclasses.dataclass
 class FederatedDataset:
     train_x: List[np.ndarray]

@@ -1,4 +1,11 @@
-"""jit'd wrapper for fused q-FedAvg reweighting over flat updates."""
+"""jit'd wrapper for fused q-FedAvg reweighting over flat updates.
+
+``qfed_reweight`` is the flat (C, D) entry point; callers that already
+hold a packetised (C, P, F) view can use ``qfed_reweight_packed`` to
+skip the pad/reshape pass. NOTE: the round-scan engine does NOT call
+through here — its scan body computes the same delta/h math inline
+(core/engine.py, q-FedAvg branch); keep the formulas in sync.
+"""
 from __future__ import annotations
 
 import jax
@@ -8,21 +15,18 @@ from repro.kernels.qfed_reweight.qfed_reweight import qfed_reweight_call
 from repro.kernels.qfed_reweight.ref import qfed_reweight_ref
 
 
-def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
-                  lipschitz: float, packet_floats: int = 256,
-                  use_kernel: bool | None = None):
-    """dw: (C, D) pseudo-gradients; losses: (C,) client losses F_k (>=0).
+def qfed_reweight_packed(x: jnp.ndarray, losses: jnp.ndarray, q: float,
+                         lipschitz: float,
+                         use_kernel: bool | None = None):
+    """x: (C, P, F) pseudo-gradients (zero-padded); losses: (C,) F_k >= 0.
 
-    Returns (delta (C, D), h (C,)) per q-FedAvg:
+    Returns (delta (C, P, F), h (C,)) per q-FedAvg:
         delta_k = F_k^q dw_k
         h_k     = q F_k^(q-1) ||dw_k||^2 + L F_k^q
     """
-    C, D = dw.shape
+    C, P, F = x.shape
     eps = 1e-10
     fq = jnp.power(losses + eps, q)
-    P = -(-D // packet_floats)
-    pad = P * packet_floats - D
-    x = jnp.pad(dw, ((0, 0), (0, pad))).reshape(C, P, packet_floats)
     if use_kernel is None:
         use_kernel = jax.default_backend() in ("tpu", "cpu")
     if use_kernel and P % 8 == 0:
@@ -32,4 +36,20 @@ def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
     else:
         delta, ssq = qfed_reweight_ref(x, fq)
     h = q * jnp.power(losses + eps, q - 1) * ssq + lipschitz * fq
+    return delta, h
+
+
+def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
+                  lipschitz: float, packet_floats: int = 256,
+                  use_kernel: bool | None = None):
+    """dw: (C, D) pseudo-gradients; losses: (C,) client losses F_k (>=0).
+
+    Returns (delta (C, D), h (C,)); see ``qfed_reweight_packed``.
+    """
+    C, D = dw.shape
+    P = -(-D // packet_floats)
+    pad = P * packet_floats - D
+    x = jnp.pad(dw, ((0, 0), (0, pad))).reshape(C, P, packet_floats)
+    delta, h = qfed_reweight_packed(x, losses, q, lipschitz,
+                                    use_kernel=use_kernel)
     return delta.reshape(C, -1)[:, :D], h

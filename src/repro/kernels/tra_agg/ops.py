@@ -8,6 +8,14 @@ Debias modes (DESIGN.md §1):
   group_rate       — paper Eq. (1) (corrected): insufficient clients scaled
                      by 1/(1-r) nominal.
   none             — plain masked weighted mean (biased; for ablation).
+
+``tra_aggregate`` is the flat (C, D) entry point; callers that already
+hold a packetised (C, P, F) view (kernel tests, mesh pipelines) can use
+``tra_aggregate_packed`` to skip the pad/reshape pass. NOTE: the
+round-scan engine does NOT call through here — its scan body folds the
+same debias-mode semantics into a single einsum without materialising
+the masked tensor (core/engine.py ``fused_agg``); a change to the mode
+definitions below must be mirrored there.
 """
 from __future__ import annotations
 
@@ -27,18 +35,18 @@ def _reshape(x, packet_floats):
     return jnp.pad(x, ((0, 0), (0, pad))).reshape(C, P, packet_floats), P, D
 
 
-def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
-                  weights: jnp.ndarray, *, mode: str = "per_coord_count",
-                  kept_frac=None, nominal_rate=None, sufficient=None,
-                  packet_floats: int = 256,
-                  use_kernel: bool | None = None) -> jnp.ndarray:
-    """updates: (C, D) already masked; pkt_mask: (C, P); weights: (C,).
+def tra_aggregate_packed(x: jnp.ndarray, pkt_mask: jnp.ndarray,
+                         weights: jnp.ndarray, *,
+                         mode: str = "per_coord_count", kept_frac=None,
+                         nominal_rate=None, sufficient=None,
+                         use_kernel: bool | None = None) -> jnp.ndarray:
+    """Debias + aggregate a packetised update tensor.
 
-    Returns the (D,) aggregated update. ``weights`` need not be normalised.
+    x: (C, P, F) already masked; pkt_mask: (C, P); weights: (C,).
+    Returns the (P, F) aggregate (caller flattens/truncates to (D,)).
     """
     assert mode in DEBIAS_MODES, mode
-    C, D = updates.shape
-    x, P, D = _reshape(updates, packet_floats)
+    C, P, F = x.shape
 
     if mode == "per_coord_count":
         m, w = pkt_mask, weights
@@ -66,7 +74,22 @@ def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
     if use_kernel and P % 8 == 0:
         bp = 16 if P % 16 == 0 else 8
         interp = jax.default_backend() != "tpu"
-        out = tra_agg_call(x, m, w, block_p=bp, interpret=interp)
-    else:
-        out = tra_agg_ref(x, m, w)
+        return tra_agg_call(x, m, w, block_p=bp, interpret=interp)
+    return tra_agg_ref(x, m, w)
+
+
+def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
+                  weights: jnp.ndarray, *, mode: str = "per_coord_count",
+                  kept_frac=None, nominal_rate=None, sufficient=None,
+                  packet_floats: int = 256,
+                  use_kernel: bool | None = None) -> jnp.ndarray:
+    """updates: (C, D) already masked; pkt_mask: (C, P); weights: (C,).
+
+    Returns the (D,) aggregated update. ``weights`` need not be normalised.
+    """
+    x, P, D = _reshape(updates, packet_floats)
+    out = tra_aggregate_packed(x, pkt_mask, weights, mode=mode,
+                               kept_frac=kept_frac,
+                               nominal_rate=nominal_rate,
+                               sufficient=sufficient, use_kernel=use_kernel)
     return out.reshape(-1)[:D]

@@ -62,6 +62,30 @@ def eligible_by_ratio(nets: ClientNetworks, ratio: float) -> np.ndarray:
     return mask
 
 
+def eligible_mask_device(upload_mbps, selection: str, *,
+                         eligible_ratio: float = 1.0,
+                         threshold_mbps: float = DEFAULT_THRESHOLD_MBPS):
+    """Device-side eligibility mask for the round-scan engine.
+
+    ``upload_mbps`` is a (C,) jnp array; returns a (C,) bool jnp array
+    matching the host-side policies above (``ratio`` via on-device
+    top-k on speed instead of argsort)."""
+    import jax.numpy as jnp
+    from jax.lax import top_k
+    n = upload_mbps.shape[0]
+    if selection == "all":
+        return jnp.ones((n,), bool)
+    if selection == "threshold":
+        return upload_mbps >= threshold_mbps
+    if selection == "ratio":
+        k = int(round(eligible_ratio * n))
+        mask = jnp.zeros((n,), bool)
+        if k == 0:
+            return mask
+        return mask.at[top_k(upload_mbps, k)[1]].set(True)
+    raise ValueError(selection)
+
+
 def upload_seconds(n_bytes: float, mbps: float, loss: float,
                    retransmit: bool) -> float:
     """Analytic upload-time model (motivates TRA; used by benchmarks only).

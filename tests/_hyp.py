@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt; CI
+installs it and runs the property tests). When it is missing, importing
+it at module scope used to break collection of the whole suite. Test
+modules import ``given``/``settings``/``st`` from here instead: with
+hypothesis installed this re-exports the real thing; without it, each
+property test individually skips at call time via
+``pytest.importorskip("hypothesis")`` while the example-based tests in
+the same module keep running.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any strategy
+        constructor returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see a
+            # zero-arg function, or it would treat the hypothesis
+            # parameters as fixtures
+            def skip_without_hypothesis():
+                pytest.importorskip("hypothesis")
+            skip_without_hypothesis.__name__ = fn.__name__
+            skip_without_hypothesis.__doc__ = fn.__doc__
+            return skip_without_hypothesis
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.packet_mask import ops as pm_ops
 from repro.kernels.packet_mask.packet_mask import packet_mask_call

@@ -1,6 +1,6 @@
 """Network trace calibration + synthetic data generation properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.data.synthetic import generate_synthetic, padded_eval_set
 from repro.network.trace import (sample_networks, upload_seconds,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ASSIGNED, INPUT_SHAPES, get_config

@@ -3,7 +3,7 @@ debias estimators (analytic, over the mask distribution), upload simulation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import tra as tra_mod
 from repro.core.tra import TRAConfig, flatten_clients, unflatten_like

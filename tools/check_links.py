@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in markdown files.
+
+Usage: python tools/check_links.py README.md docs [more files/dirs...]
+
+Checks inline markdown links/images whose target is a relative path
+(external http(s)/mailto links and pure #anchors are ignored). Targets
+are resolved against the file's directory; a `path#anchor` target only
+checks the path part.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def iter_md_files(args):
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    text = md.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            line = text[:m.start()].count("\n") + 1
+            broken.append((md, line, target))
+    return broken
+
+
+def main(argv):
+    if not argv:
+        argv = ["README.md", "docs"]
+    broken = []
+    n_files = 0
+    for md in iter_md_files(argv):
+        n_files += 1
+        broken += check_file(md)
+    for md, line, target in broken:
+        print(f"{md}:{line}: broken link -> {target}")
+    print(f"checked {n_files} markdown file(s), "
+          f"{len(broken)} broken link(s)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
