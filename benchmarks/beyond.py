@@ -6,27 +6,23 @@
 from __future__ import annotations
 
 from benchmarks.common import dataset, emit, run_fl
-from repro.core.server import FederatedServer, FLConfig
-from repro.core.tra import TRAConfig
 
 
 def _run_ef(algo, data, loss_rate, ef, rounds=40, seeds=(0, 1, 2)):
+    """3-seed mean for one (loss_rate, ef) cell — the seed axis rides
+    the sweep engine, so all seeds run as one compiled program."""
     import numpy as np
-    from benchmarks.common import networks
-    accs, w10s = [], []
-    for seed in seeds:
-        cfg = FLConfig(algo=algo, n_rounds=rounds, clients_per_round=10,
-                       local_steps=10, eval_every=10 ** 6, selection="all",
-                       error_feedback=ef, seed=seed,
-                       tra=TRAConfig(enabled=True, loss_rate=loss_rate,
-                                     debias="group_rate", threshold_mbps=1e9))
-        s = FederatedServer(cfg, data, networks())
-        s.run()
-        r = s.evaluate()
-        accs.append(r.sample_average)
-        w10s.append(r.worst10)
-    return {"sample_average": float(np.mean(accs)),
-            "worst10": float(np.mean(w10s)), "n_seeds": len(seeds)}
+    from benchmarks.common import networks, run_fl_grid
+    grid = run_fl_grid(algo, data, seeds=seeds, loss_rates=(loss_rate,),
+                       selection="all", tra_enabled=True,
+                       debias="group_rate", rounds=rounds,
+                       error_feedback=ef, threshold_mbps=1e9,
+                       nets=networks())
+    cells = grid["cells"]
+    return {"sample_average": float(np.mean([c["sample_average"]
+                                             for c in cells])),
+            "worst10": float(np.mean([c["worst10"] for c in cells])),
+            "n_seeds": len(seeds)}
 
 
 def ef_tra():

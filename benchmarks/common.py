@@ -8,14 +8,15 @@ numbers).
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.server import FederatedServer, FLConfig
+from repro.core.server import FederatedServer, FLConfig, run_grid
 from repro.core.tra import TRAConfig
 from repro.data.synthetic import FederatedDataset, generate_synthetic
 from repro.network.trace import ClientNetworks
@@ -45,18 +46,32 @@ def networks() -> ClientNetworks:
     return ClientNetworks(speed, np.full(N_CLIENTS, 0.05))
 
 
+def _fl_config(algo, *, seed, loss_rate, selection, ratio, tra_enabled,
+               debias, rounds, q, lr, engine="scan",
+               error_feedback=False, threshold_mbps=None) -> FLConfig:
+    """Single source of the benchmark cell config — run_fl and
+    run_fl_grid build from here so the sweep-vs-single equivalence the
+    benchmarks rely on cannot drift."""
+    if lr is None:
+        lr = 0.05 if algo == "scaffold" else 0.1
+    tra_kw = dict(enabled=tra_enabled, loss_rate=loss_rate, debias=debias)
+    if threshold_mbps is not None:
+        tra_kw["threshold_mbps"] = threshold_mbps
+    return FLConfig(algo=algo, n_rounds=rounds, clients_per_round=CPR,
+                    local_steps=10, eval_every=10 ** 6, seed=seed, q=q,
+                    lr=lr, selection=selection, eligible_ratio=ratio,
+                    engine=engine, error_feedback=error_feedback,
+                    tra=TRAConfig(**tra_kw))
+
+
 def run_fl(algo: str, data: FederatedDataset, *, selection="all", ratio=1.0,
            tra_enabled=False, loss_rate=0.1, debias="group_rate",
            rounds=ROUNDS, q=1.0, seed=0, lr=None,
            personalized=False, engine="scan") -> Dict[str, float]:
-    if lr is None:
-        lr = 0.05 if algo == "scaffold" else 0.1
-    cfg = FLConfig(algo=algo, n_rounds=rounds, clients_per_round=CPR,
-                   local_steps=10, eval_every=10 ** 6, seed=seed, q=q, lr=lr,
-                   selection=selection, eligible_ratio=ratio,
-                   engine=engine,
-                   tra=TRAConfig(enabled=tra_enabled, loss_rate=loss_rate,
-                                 debias=debias))
+    cfg = _fl_config(algo, seed=seed, loss_rate=loss_rate,
+                     selection=selection, ratio=ratio,
+                     tra_enabled=tra_enabled, debias=debias,
+                     rounds=rounds, q=q, lr=lr, engine=engine)
     srv = FederatedServer(cfg, data, networks())
     t0 = time.time()
     srv.run()
@@ -68,6 +83,39 @@ def run_fl(algo: str, data: FederatedDataset, *, selection="all", ratio=1.0,
     if personalized:
         out["personal"] = srv.evaluate_personalized().as_dict()
     return out
+
+
+def run_fl_grid(algo: str, data: FederatedDataset, *, seeds=(0,),
+                loss_rates=(0.1,), selection="all", ratio=1.0,
+                tra_enabled=True, debias="group_rate", rounds=ROUNDS,
+                q=1.0, lr=None, error_feedback=False,
+                threshold_mbps=None, nets=None) -> Dict:
+    """Cross-product (seed x loss_rate) grid routed through the sweep
+    engine: every cell runs inside ONE compiled vmap(scan) program
+    (core/server.run_grid) instead of one FederatedServer per cell.
+
+    Returns {"cells": [per-cell dicts keyed like run_fl's report],
+    "seconds": grid wall time, "scenarios": S}; cells are ordered as
+    itertools.product(seeds, loss_rates)."""
+    cfgs = [_fl_config(algo, seed=seed, loss_rate=rate,
+                       selection=selection, ratio=ratio,
+                       tra_enabled=tra_enabled, debias=debias,
+                       rounds=rounds, q=q, lr=lr,
+                       error_feedback=error_feedback,
+                       threshold_mbps=threshold_mbps)
+            for seed, rate in itertools.product(seeds, loss_rates)]
+    t0 = time.time()
+    histories = run_grid(cfgs, data, nets if nets is not None
+                         else networks())
+    dt = time.time() - t0
+    cells: List[Dict] = []
+    for (seed, rate), hist in zip(itertools.product(seeds, loss_rates),
+                                  histories):
+        rep = hist[-1].report
+        cells.append(dict(rep.as_dict(), seed=seed, loss_rate=rate,
+                          rounds=rounds, engine="sweep"))
+    return {"cells": cells, "seconds": dt, "scenarios": len(cfgs),
+            "rounds_per_sec": rounds * len(cfgs) / dt}
 
 
 def emit(name: str, us_per_call: float, derived, payload: Optional[dict] = None):

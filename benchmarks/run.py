@@ -13,12 +13,12 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (beyond, engine_bench, kernel_bench,
-                            paper_figures, roofline)
+                            paper_figures, roofline, sweep_bench)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
         benches += list(paper_figures.ALL) + list(beyond.ALL) \
-            + list(engine_bench.ALL)
+            + list(engine_bench.ALL) + list(sweep_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

@@ -24,13 +24,28 @@ needs lives on device for the whole block:
                            accumulated in scan outputs and flushed to
                            host once per block.
 
+Scenario-varying inputs — PRNG base key, TRA loss rate, eligibility and
+sufficiency masks, and the staged dataset — ride through the jits as a
+traced ``ScenarioCtx`` argument rather than Python closure constants.
+That is what lets `core/sweep.py` stack S scenarios behind a leading
+axis and ``vmap`` the *same* step function over them: a whole paper
+grid becomes one compiled program. Static structure (algorithm, debias
+mode, cohort size, local steps, batch size, TRA on/off, error
+feedback) stays in the closure and must be shared across a sweep.
+
 ``run_single`` jits the *same* step function for one round — that is the
 per-round reference path `FederatedServer.run_round` uses, which is what
 makes the scanned and sequential paths equivalent under a fixed seed
 (see tests/test_engine.py).
+
+``EngineState`` is donated on every engine jit (``donate_argnums``), so
+the (N, D_up) error-feedback and SCAFFOLD buffers are updated in place
+across dispatches instead of being copied every block
+(tests/test_sweep.py asserts the buffer aliasing).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -58,6 +73,22 @@ class EngineState(NamedTuple):
     lam: jnp.ndarray      # (N,) AFL mixture weights (always allocated)
 
 
+class ScenarioCtx(NamedTuple):
+    """Everything a round may vary *per scenario* without recompiling.
+
+    These are traced jit arguments (never closure constants); under the
+    sweep engine every field gains a leading scenario axis and the step
+    is vmapped over it. Anything NOT in here — algorithm, debias mode,
+    cohort size, local steps, batch size, TRA enabled, error feedback —
+    is baked into the step closure and must be identical across a sweep.
+    """
+    base_key: jnp.ndarray    # (2,) uint32 PRNG root of the fold_in chain
+    loss_rate: jnp.ndarray   # ()   f32 TRA nominal drop rate
+    eligible: jnp.ndarray    # (N,) bool selection mask
+    sufficient: jnp.ndarray  # (N,) f32 1-bit sufficiency reports
+    data: DeviceDataset      # staged train set (train_x/train_y/counts)
+
+
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
     """Uniform sample of ``k`` clients without replacement from the
     eligible set, entirely on device (Gumbel top-k with uniform
@@ -68,12 +99,272 @@ def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
     return jax.lax.top_k(scores, k)[1]
 
 
+def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
+                           weights: jnp.ndarray, *, mode: str, d_up: int,
+                           kept=None, sufficient=None, loss_rate=None,
+                           mult=None) -> jnp.ndarray:
+    """Debiased weighted aggregate of the (implicitly) masked uploads.
+
+    xp: (C, P, F) packetised UNMASKED uploads; pkt_mask: (C, P);
+    weights: (C,). The packet mask, per-mode debias scaling and client
+    weights all fold into a single einsum, so the masked per-client
+    tensor is never materialised. Numerically equivalent to
+    ``kernels/tra_agg/ops.tra_aggregate_packed`` on pre-masked inputs
+    for every mode in DEBIAS_MODES — locked by
+    tests/test_sweep.py::test_fused_agg_matches_kernel_ops.
+
+    kept (C,) is the coordinate-weighted kept fraction (required for
+    ``per_client_rate``); sufficient (C,) and loss_rate () feed
+    ``group_rate``; ``mult`` scales clients on top of ``weights``
+    without entering the denominator (q-FedAvg's F^q factors).
+    """
+    q_c = weights if mult is None else weights * mult
+    if mode == "per_client_rate":
+        q_c = q_c / jnp.maximum(kept, 1e-6)
+    elif mode == "group_rate":
+        q_c = q_c * jnp.where(
+            sufficient.astype(bool), 1.0,
+            1.0 / jnp.maximum(1.0 - loss_rate, 1e-6))
+    wm = pkt_mask * q_c[:, None]
+    if mode == "per_coord_count":
+        den = jnp.maximum((pkt_mask * weights[:, None]).sum(0),
+                          1e-12)[:, None]
+    else:
+        den = jnp.maximum(weights.sum(), 1e-12)
+    out = jnp.einsum("cpf,cp->pf", xp, wm) / den
+    return out.reshape(-1)[:d_up]
+
+
+# FLConfig fields a scenario may vary without changing program structure;
+# everything else must agree across engines sharing a compiled step.
+SWEEP_VARYING_FIELDS = ("seed", "selection", "eligible_ratio")
+SWEEP_VARYING_TRA_FIELDS = ("loss_rate", "threshold_mbps")
+
+
+def static_signature(cfg):
+    """The config with scenario-varying knobs normalised away. Two
+    configs produce the same compiled round step (and may share a
+    sweep) iff their signatures are equal."""
+    tra = dataclasses.replace(
+        cfg.tra, **{f: 0.0 for f in SWEEP_VARYING_TRA_FIELDS})
+    return dataclasses.replace(
+        cfg, tra=tra, seed=0, selection="all", eligible_ratio=1.0)
+
+
+def _static_key(cfg):
+    """Hashable cache key for the compiled-program caches (primitives
+    only — ``astuple`` recurses into the nested TRAConfig). Beyond the
+    sweep-varying fields, the round/eval schedule and engine-mode knobs
+    are normalised away too: they drive the block loop, never the
+    compiled step, so configs differing only there share programs."""
+    return dataclasses.astuple(dataclasses.replace(
+        static_signature(cfg), n_rounds=0, eval_every=0, engine="scan"))
+
+
+# step/jit cache shared across engine instances: scenario-varying values
+# are traced ScenarioCtx arguments, so every engine (and server) with the
+# same static config reuses ONE compiled program per input shape instead
+# of recompiling per instance — grid drivers construct engines per cell
+# for free after the first.
+_STEP_CACHE: Dict[Any, Any] = {}
+
+
+def _cached_jits(cfg, cohort: int):
+    key = (_static_key(cfg), cohort)
+    if key not in _STEP_CACHE:
+        step = make_round_step(cfg, cohort)
+        single = jax.jit(step, donate_argnums=(1,))
+        block = jax.jit(
+            lambda ctx, state, ts: jax.lax.scan(
+                lambda s, t: step(ctx, s, t), state, ts),
+            donate_argnums=(1,))
+        _STEP_CACHE[key] = (step, single, block)
+    return _STEP_CACHE[key]
+
+
+def init_engine_state(cfg, params, n_clients: int) -> EngineState:
+    """Fresh engine state for one scenario (used by both the single
+    engine and, stacked, by the sweep engine). ``params`` are copied:
+    the engine jits DONATE the state, and the caller's arrays must not
+    be destroyed with it."""
+    N = n_clients
+    params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
+    D = ravel_pytree(params)[0].shape[0]
+    # SCAFFOLD uploads (dw ++ dc) ride one TRA stream, so its EF
+    # memory covers the concatenated 2D vector.
+    up_dim = 2 * D if cfg.algo == "scaffold" else D
+    return EngineState(
+        params=params,
+        ef_mem=jnp.zeros((N, up_dim), jnp.float32)
+        if cfg.error_feedback else jnp.zeros((0,), jnp.float32),
+        c_global=jnp.zeros((D,), jnp.float32)
+        if cfg.algo == "scaffold" else jnp.zeros((0,), jnp.float32),
+        c_i=jnp.zeros((N, D), jnp.float32)
+        if cfg.algo == "scaffold" else jnp.zeros((0,), jnp.float32),
+        lam=jnp.ones((N,), jnp.float32) / N,
+    )
+
+
+def make_round_step(cfg, cohort: int):
+    """Build the round step ``step(ctx, state, t) -> (state, logs)``.
+
+    ``ctx`` carries every scenario-varying input as traced values; the
+    returned step is what ``RoundScanEngine`` jits for one scenario and
+    what ``SweepEngine`` vmaps over a stacked ctx/state for S scenarios
+    in one program. N (client count), M (padded set length) and the
+    model dimension come from the traced shapes, so the same step works
+    for any same-shaped scenario.
+    """
+    tra_cfg = cfg.tra
+    hyper = cfg.hyper()
+    algo = cfg.algo
+    ef = cfg.error_feedback
+    C = cohort
+    steps, bs = cfg.local_steps, cfg.batch_size
+    F = tra_cfg.packet_floats
+    debias = tra_cfg.debias
+    local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+
+    def step(ctx: ScenarioCtx, state: EngineState, t):
+        dd = ctx.data
+        N = dd.counts.shape[0]
+        afl_len = min(64, dd.train_x.shape[1])
+        params = state.params
+        old_vec, _ = ravel_pytree(params)
+        # one threefry invocation covers the whole round: selection
+        # gumbels, batch indices and the TRA packet draws (upload
+        # width is static at trace time, so P is known here)
+        D_model = old_vec.shape[0]
+        D_up = 2 * D_model if algo == "scaffold" else D_model
+        P = n_packets(D_up, F)
+        n_batch = C * steps * bs
+        key = jax.random.fold_in(ctx.base_key, t)
+        u_all = jax.random.uniform(key, (N + n_batch + C * P,),
+                                   minval=1e-12, maxval=1.0)
+        u_sel = u_all[:N]
+        u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
+        u_tra = u_all[N + n_batch:].reshape(C, P)
+
+        gumbel = -jnp.log(-jnp.log(u_sel))
+        ids = jax.lax.top_k(jnp.where(ctx.eligible, gumbel, -jnp.inf),
+                            C)[1]
+        counts = dd.counts[ids]                              # (C,)
+        idx = jnp.minimum((u_idx * counts[:, None, None]
+                           ).astype(jnp.int32), counts[:, None, None] - 1)
+        # direct (client, sample) gather — never materialises the
+        # cohort's full padded datasets inside the scan
+        cid = ids[:, None, None]
+        X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
+        Y = dd.train_y[cid, idx]                 # (C, steps, bs)
+        w = counts.astype(jnp.float32)
+        weights = w / w.sum()
+        suff = ctx.sufficient[ids]
+
+        # local training (vmapped cohort)
+        if algo == "scaffold":
+            c_global = unflatten_like(state.c_global, params)
+
+            def loc(p, x, y, ci_vec):
+                ci = unflatten_like(ci_vec, params)
+                return cu.scaffold_local(p, x, y, c_global, ci, hyper)
+
+            uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                params, X, Y, state.c_i[ids])
+            dw = flatten_clients(uploads["dw"], C)
+            dc = flatten_clients(uploads["dc"], C)
+            flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
+        else:
+            uploads, aux = jax.vmap(
+                lambda p, x, y: local(p, x, y, hyper),
+                in_axes=(None, 0, 0))(params, X, Y)
+            flat = flatten_clients(uploads, C)               # (C, D)
+
+        # TRA lossy upload + debiased aggregation, fused in-scan via
+        # fused_debias_aggregate (only error feedback needs the masked
+        # per-client tensor explicitly).
+        if ef:
+            flat = flat + state.ef_mem[ids]
+        pad = P * F - D_up
+        xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
+        if tra_cfg.enabled:
+            lost = (u_tra < ctx.loss_rate) \
+                & ~suff.astype(bool)[:, None]
+            pkt_mask = 1.0 - lost.astype(jnp.float32)
+        else:
+            pkt_mask = jnp.ones((C, P))
+        new_ef = state.ef_mem.at[ids].set(
+            (xp * (1.0 - pkt_mask[:, :, None])
+             ).reshape(C, P * F)[:, :D_up]) if ef else state.ef_mem
+
+        kept = None
+        if debias == "per_client_rate":
+            # coordinate-weighted kept fraction (last packet partial)
+            pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
+            kept = (pkt_mask @ pcnt) / D_up
+
+        def fused_agg(w, mult=None):
+            return fused_debias_aggregate(
+                xp, pkt_mask, w, mode=debias, d_up=D_up, kept=kept,
+                sufficient=suff, loss_rate=ctx.loss_rate, mult=mult)
+
+        # server update per algorithm
+        c_global_new, c_i_new, lam_new = \
+            state.c_global, state.c_i, state.lam
+        if algo == "scaffold":
+            agg = fused_agg(weights)
+            D = dw.shape[1]
+            dw_agg, dc_agg = agg[:D], agg[D:]
+            new_vec = old_vec + dw_agg
+            c_global_new = state.c_global + (C / N) * dc_agg
+            c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
+        elif algo == "qfedavg":
+            # delta_k = F_k^q dw_k;  h_k = q F^(q-1)||dw||^2 + L F^q
+            eps = 1e-10
+            fq = jnp.power(aux["loss0"] + eps, cfg.q)
+            ssq = ((xp * xp).sum(-1) * pkt_mask).sum(-1)
+            h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
+                * ssq + cfg.lipschitz * fq
+            # debiased SUM of deltas = debiased mean * C
+            agg = fused_agg(jnp.ones(C), mult=fq) * C
+            new_vec = old_vec - agg / jnp.maximum(h.sum(), 1e-8)
+        elif algo == "afl":
+            new_vec = fused_agg(state.lam[ids])
+        elif algo == "pfedme":
+            new_vec = (1 - cfg.pfedme_beta) * old_vec \
+                + cfg.pfedme_beta * fused_agg(weights)
+        else:  # fedavg / perfedavg: weighted mean of uploaded models
+            new_vec = fused_agg(weights)
+        new_params = unflatten_like(new_vec, params)
+
+        if algo == "afl":
+            # projected gradient ascent on client losses (minimax),
+            # on the staged data with a padding mask
+            Xe = dd.train_x[ids, :afl_len]
+            Ye = dd.train_y[ids, :afl_len]
+            msk = (jnp.arange(afl_len)[None, :]
+                   < counts[:, None]).astype(jnp.float32)
+            losses = jax.vmap(mlp_weighted_loss,
+                              in_axes=(None, 0, 0, 0))(
+                new_params, Xe, Ye, msk)
+            lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
+            lam = jnp.maximum(lam, 0.0)
+            lam_new = lam / lam.sum()
+
+        new_state = EngineState(new_params, new_ef, c_global_new,
+                                c_i_new, lam_new)
+        return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
+
+    return step
+
+
 class RoundScanEngine:
     """Round-scan executor for one (config, dataset, network) scenario.
 
     The engine is stateless between calls: callers own the
     ``EngineState`` and thread it through ``run_block`` / ``run_single``,
-    which is how state survives block boundaries by construction.
+    which is how state survives block boundaries by construction. The
+    passed-in state is DONATED — callers must use the returned state and
+    drop the old reference (which every call site already does).
     """
 
     def __init__(self, cfg, data, sufficient: np.ndarray,
@@ -92,204 +383,29 @@ class RoundScanEngine:
         self.eligible = jnp.asarray(np.asarray(eligible, bool))
         self.sufficient = jnp.asarray(
             np.asarray(sufficient, np.float32))
-        step = self._make_step()
-        self._single = jax.jit(step)
-        self._block = jax.jit(
-            lambda state, ts: jax.lax.scan(step, state, ts))
+        self.ctx = ScenarioCtx(
+            base_key=jax.random.PRNGKey(cfg.seed),
+            loss_rate=jnp.float32(cfg.tra.loss_rate),
+            eligible=self.eligible,
+            sufficient=self.sufficient,
+            data=self.dd)
+        self._step, self._single, self._block = _cached_jits(
+            cfg, self.cohort)
 
     # -- state --------------------------------------------------------------
     def init_state(self, params) -> EngineState:
-        cfg = self.cfg
-        N = self.n_clients
-        D = ravel_pytree(params)[0].shape[0]
-        # SCAFFOLD uploads (dw ++ dc) ride one TRA stream, so its EF
-        # memory covers the concatenated 2D vector.
-        up_dim = 2 * D if cfg.algo == "scaffold" else D
-        zero = jnp.zeros((0,), jnp.float32)
-        return EngineState(
-            params=params,
-            ef_mem=jnp.zeros((N, up_dim), jnp.float32)
-            if cfg.error_feedback else zero,
-            c_global=jnp.zeros((D,), jnp.float32)
-            if cfg.algo == "scaffold" else zero,
-            c_i=jnp.zeros((N, D), jnp.float32)
-            if cfg.algo == "scaffold" else zero,
-            lam=jnp.ones((N,), jnp.float32) / N,
-        )
+        return init_engine_state(self.cfg, params, self.n_clients)
 
     # -- execution ----------------------------------------------------------
     def run_single(self, state: EngineState, t: int
                    ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
         """One round at absolute index ``t`` (the reference path)."""
-        return self._single(state, jnp.asarray(t, jnp.int32))
+        return self._single(self.ctx, state, jnp.asarray(t, jnp.int32))
 
     def run_block(self, state: EngineState, t0: int, k: int
                   ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
         """Scan rounds [t0, t0+k) in one device program; flush logs to
         host. Returns (state, {"loss": (k,), "ids": (k, C)})."""
         ts = jnp.arange(t0, t0 + k, dtype=jnp.int32)
-        state, logs = self._block(state, ts)
+        state, logs = self._block(self.ctx, state, ts)
         return state, {k_: np.asarray(v) for k_, v in logs.items()}
-
-    # -- scan body ----------------------------------------------------------
-    def _make_step(self):
-        cfg = self.cfg
-        tra_cfg = cfg.tra
-        hyper = cfg.hyper()
-        algo = cfg.algo
-        ef = cfg.error_feedback
-        C, N = self.cohort, self.n_clients
-        dd = self.dd
-        eligible, suff_all = self.eligible, self.sufficient
-        steps, bs = cfg.local_steps, cfg.batch_size
-        base_key = jax.random.PRNGKey(cfg.seed)
-        d_feat = dd.train_x.shape[-1]
-        afl_len = min(64, dd.train_x.shape[1])
-        local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
-
-        def step(state: EngineState, t):
-            params = state.params
-            old_vec, _ = ravel_pytree(params)
-            # one threefry invocation covers the whole round: selection
-            # gumbels, batch indices and the TRA packet draws (upload
-            # width is static at trace time, so P is known here)
-            D_model = old_vec.shape[0]
-            D_up = 2 * D_model if algo == "scaffold" else D_model
-            F = tra_cfg.packet_floats
-            P = n_packets(D_up, F)
-            n_batch = C * steps * bs
-            key = jax.random.fold_in(base_key, t)
-            u_all = jax.random.uniform(key, (N + n_batch + C * P,),
-                                       minval=1e-12, maxval=1.0)
-            u_sel = u_all[:N]
-            u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
-            u_tra = u_all[N + n_batch:].reshape(C, P)
-
-            gumbel = -jnp.log(-jnp.log(u_sel))
-            ids = jax.lax.top_k(jnp.where(eligible, gumbel, -jnp.inf),
-                                C)[1]
-            counts = dd.counts[ids]                              # (C,)
-            idx = jnp.minimum((u_idx * counts[:, None, None]
-                               ).astype(jnp.int32), counts[:, None, None] - 1)
-            # direct (client, sample) gather — never materialises the
-            # cohort's full padded datasets inside the scan
-            cid = ids[:, None, None]
-            X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
-            Y = dd.train_y[cid, idx]                 # (C, steps, bs)
-            w = counts.astype(jnp.float32)
-            weights = w / w.sum()
-            suff = suff_all[ids]
-
-            # local training (vmapped cohort)
-            if algo == "scaffold":
-                c_global = unflatten_like(state.c_global, params)
-
-                def loc(p, x, y, ci_vec):
-                    ci = unflatten_like(ci_vec, params)
-                    return cu.scaffold_local(p, x, y, c_global, ci, hyper)
-
-                uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
-                    params, X, Y, state.c_i[ids])
-                dw = flatten_clients(uploads["dw"], C)
-                dc = flatten_clients(uploads["dc"], C)
-                flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
-            else:
-                uploads, aux = jax.vmap(
-                    lambda p, x, y: local(p, x, y, hyper),
-                    in_axes=(None, 0, 0))(params, X, Y)
-                flat = flatten_clients(uploads, C)               # (C, D)
-
-            # TRA lossy upload + debiased aggregation, fused in-scan:
-            # one pad/reshape into packet space, then the packet mask,
-            # per-mode debias scaling and client weights all fold into a
-            # single einsum — the masked per-client tensor is never
-            # materialised (only error feedback needs it explicitly).
-            if ef:
-                flat = flat + state.ef_mem[ids]
-            pad = P * F - D_up
-            xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
-            if tra_cfg.enabled:
-                lost = (u_tra < tra_cfg.loss_rate) \
-                    & ~suff.astype(bool)[:, None]
-                pkt_mask = 1.0 - lost.astype(jnp.float32)
-            else:
-                pkt_mask = jnp.ones((C, P))
-            new_ef = state.ef_mem.at[ids].set(
-                (xp * (1.0 - pkt_mask[:, :, None])
-                 ).reshape(C, P * F)[:, :D_up]) if ef else state.ef_mem
-
-            debias = tra_cfg.debias
-            if debias == "per_client_rate":
-                # coordinate-weighted kept fraction (last packet partial)
-                pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
-                kept = (pkt_mask @ pcnt) / D_up
-
-            def fused_agg(w, mult=None):
-                """Debiased weighted aggregate of the (implicitly)
-                masked uploads: einsum(xp, pkt_mask * per-client scale)
-                over the cohort, normalised per debias mode. Mirrors
-                kernels/tra_agg/ops.py DEBIAS_MODES — keep in sync."""
-                q_c = w if mult is None else w * mult
-                if debias == "per_client_rate":
-                    q_c = q_c / jnp.maximum(kept, 1e-6)
-                elif debias == "group_rate":
-                    q_c = q_c * jnp.where(
-                        suff.astype(bool), 1.0,
-                        1.0 / jnp.maximum(1.0 - tra_cfg.loss_rate, 1e-6))
-                wm = pkt_mask * q_c[:, None]
-                if debias == "per_coord_count":
-                    den = jnp.maximum((pkt_mask * w[:, None]).sum(0),
-                                      1e-12)[:, None]
-                else:
-                    den = jnp.maximum(w.sum(), 1e-12)
-                out = jnp.einsum("cpf,cp->pf", xp, wm) / den
-                return out.reshape(-1)[:D_up]
-
-            # server update per algorithm
-            c_global_new, c_i_new, lam_new = \
-                state.c_global, state.c_i, state.lam
-            if algo == "scaffold":
-                agg = fused_agg(weights)
-                D = dw.shape[1]
-                dw_agg, dc_agg = agg[:D], agg[D:]
-                new_vec = old_vec + dw_agg
-                c_global_new = state.c_global + (C / N) * dc_agg
-                c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
-            elif algo == "qfedavg":
-                # delta_k = F_k^q dw_k;  h_k = q F^(q-1)||dw||^2 + L F^q
-                eps = 1e-10
-                fq = jnp.power(aux["loss0"] + eps, cfg.q)
-                ssq = jnp.einsum("cpf,cp->c", xp * xp, pkt_mask)
-                h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
-                    * ssq + cfg.lipschitz * fq
-                # debiased SUM of deltas = debiased mean * C
-                agg = fused_agg(jnp.ones(C), mult=fq) * C
-                new_vec = old_vec - agg / jnp.maximum(h.sum(), 1e-8)
-            elif algo == "afl":
-                new_vec = fused_agg(state.lam[ids])
-            elif algo == "pfedme":
-                new_vec = (1 - cfg.pfedme_beta) * old_vec \
-                    + cfg.pfedme_beta * fused_agg(weights)
-            else:  # fedavg / perfedavg: weighted mean of uploaded models
-                new_vec = fused_agg(weights)
-            new_params = unflatten_like(new_vec, params)
-
-            if algo == "afl":
-                # projected gradient ascent on client losses (minimax),
-                # on the staged data with a padding mask
-                Xe = dd.train_x[ids, :afl_len]
-                Ye = dd.train_y[ids, :afl_len]
-                msk = (jnp.arange(afl_len)[None, :]
-                       < counts[:, None]).astype(jnp.float32)
-                losses = jax.vmap(mlp_weighted_loss,
-                                  in_axes=(None, 0, 0, 0))(
-                    new_params, Xe, Ye, msk)
-                lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
-                lam = jnp.maximum(lam, 0.0)
-                lam_new = lam / lam.sum()
-
-            new_state = EngineState(new_params, new_ef, c_global_new,
-                                    c_i_new, lam_new)
-            return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
-
-        return step

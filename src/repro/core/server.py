@@ -18,7 +18,7 @@ Selection policies (the paper's comparison axis):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,7 @@ from repro.core import tra as tra_mod
 from repro.core.engine import RoundScanEngine
 from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
+from repro.core.sweep import SweepEngine
 from repro.core.tra import TRAConfig
 from repro.data.synthetic import (FederatedDataset, padded_eval_set,
                                   sample_batches)
@@ -227,3 +228,71 @@ class FederatedServer:
                                   jnp.asarray(self.eval_W))
         return fairness_report(np.asarray(acc), np.asarray(n),
                                np.asarray(correct))
+
+
+# ---------------------------------------------------------------------------
+# grid execution: S scenario configs -> one vmap(scan) program
+# ---------------------------------------------------------------------------
+def _stacked_eval_sets(datas: Sequence[FederatedDataset]):
+    """Per-scenario padded eval sets, re-padded to a common length and
+    stacked behind the scenario axis: (S, N, M), mask-weighted so the
+    cross-scenario padding never scores."""
+    sets = [padded_eval_set(d) for d in datas]
+    M = max(x.shape[1] for x, _, _ in sets)
+
+    def _pad(a):
+        return np.pad(a, ((0, 0), (0, M - a.shape[1]))
+                      + ((0, 0),) * (a.ndim - 2))
+
+    X = np.stack([_pad(x) for x, _, _ in sets])
+    Y = np.stack([_pad(y) for _, y, _ in sets])
+    W = np.stack([_pad(w) for _, _, w in sets])
+    return jnp.asarray(X), jnp.asarray(Y), jnp.asarray(W)
+
+
+def run_grid(cfgs: Sequence[FLConfig], datas, nets=None
+             ) -> List[List[RoundLog]]:
+    """Run a grid of same-shaped scenario configs as ONE compiled
+    vmap(scan) program (core/sweep.SweepEngine) and demux per-scenario
+    histories on flush.
+
+    Mirrors ``FederatedServer.run`` for each scenario: same block
+    boundaries, same eval schedule, fairness reports computed (vmapped
+    over the scenario axis) at eval boundaries. Per-scenario histories
+    are bit-identical to S independent servers (tests/test_sweep.py).
+    Personalized (pFedMe / Per-FedAvg) evaluation is not offered on the
+    grid path — run those cells through ``FederatedServer`` when the
+    personalized report is needed.
+
+    ``datas``/``nets`` follow ``SweepEngine.from_configs`` broadcasting:
+    one shared value, a length-S sequence, or None (nets only) to sample
+    from each scenario's seed.
+    """
+    cfgs = list(cfgs)
+    engine = SweepEngine.from_configs(cfgs, datas, nets)
+    cfg = engine.cfg
+    S = engine.n_scenarios
+    X, Y, W = _stacked_eval_sets([s.data for s in engine.scenarios])
+    eval_fn = jax.jit(jax.vmap(jax.vmap(mlp_accuracy,
+                                        in_axes=(None, 0, 0, 0))))
+    states = engine.init_states()
+    histories: List[List[RoundLog]] = [[] for _ in range(S)]
+    t = 0
+    while t < cfg.n_rounds:
+        t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
+                 cfg.n_rounds)
+        states, logs = engine.run_block(states, t, t1 - t)
+        for s in range(S):
+            for i in range(t1 - t):
+                histories[s].append(RoundLog(t + i,
+                                             float(logs["loss"][s, i])))
+        last = t1 - 1
+        if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
+            acc, correct, n = eval_fn(states.params, X, Y, W)
+            acc, correct, n = (np.asarray(acc), np.asarray(correct),
+                               np.asarray(n))
+            for s in range(S):
+                histories[s][-1].report = fairness_report(
+                    acc[s], n[s], correct[s])
+        t = t1
+    return histories

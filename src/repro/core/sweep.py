@@ -1,0 +1,234 @@
+"""Vectorized multi-scenario sweep engine: the whole paper grid as ONE
+compiled ``vmap(scan)`` program.
+
+A *scenario* is everything that may vary without changing program
+structure: the PRNG seed, the TRA loss rate, the eligibility and
+sufficiency masks (selection policy applied to that scenario's network
+draw), and the dataset draw (alpha/beta heterogeneity re-draws). The
+paper's result grids — loss rate x debias mode x algorithm x seeds —
+decompose into groups of such scenarios per static configuration.
+
+``SweepEngine`` stacks S scenario instances behind a leading scenario
+axis: ``ScenarioCtx`` fields become (S, ...) arrays, per-scenario
+``EngineState`` is tree-stacked, and the staged data is rectangular
+(S, N, M, D) (``data/synthetic.stage_scenarios_on_device``). One
+``jax.vmap`` over the SAME round step that ``RoundScanEngine`` jits
+runs every scenario's round at once, and one ``lax.scan`` runs all
+rounds — so an entire grid is one XLA program, compiled once,
+dispatched once per block. Per-scenario (loss, ids) histories come
+back stacked and are demuxed on flush; they are bit-identical to S
+independent ``RoundScanEngine`` runs with the same seeds/configs
+(tests/test_sweep.py, CI smoke).
+
+Static structure — algorithm, debias mode, cohort size, local steps,
+batch size, TRA on/off, error feedback, round/eval schedule, learning
+hyper-parameters — must be shared across a sweep; ``from_configs``
+validates that and raises on a mixed grid (split such a grid into one
+sweep per static signature).
+
+The stacked ``EngineState`` is donated into the sweep jit, so the
+(S, N, D_up) error-feedback and SCAFFOLD buffers are updated in place
+rather than copied every block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tra as tra_mod
+from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
+                               SWEEP_VARYING_TRA_FIELDS, EngineState,
+                               ScenarioCtx, _static_key,
+                               init_engine_state, make_round_step,
+                               static_signature)
+from repro.core.mlp import mlp_init
+from repro.data.synthetic import (DeviceDataset, FederatedDataset,
+                                  stage_on_device,
+                                  stage_scenarios_on_device)
+from repro.network.trace import (eligible_mask_device, sample_networks,
+                                 stage_network_scenarios)
+
+# sweep-program cache, mirroring engine._STEP_CACHE: one compiled
+# vmap(scan) program per (static config, cohort, shared-vs-stacked
+# data); grids of any size S reuse it (jit re-specialises per shape).
+_SWEEP_CACHE: Dict[Any, Any] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of a paper grid (host-side description)."""
+    seed: int
+    loss_rate: float
+    sufficient: np.ndarray        # (N,) 0/1 sufficiency reports
+    eligible: np.ndarray          # (N,) bool selection mask
+    data: FederatedDataset        # this scenario's dataset draw
+
+
+def scenario_from_config(cfg, data: FederatedDataset,
+                         nets=None) -> Scenario:
+    """Derive a Scenario exactly the way ``FederatedServer`` derives its
+    engine inputs (same network sampling from the scenario seed, same
+    sufficiency report and eligibility policy), so sweep cells match
+    single-server runs bit-for-bit."""
+    rng = np.random.default_rng(cfg.seed)
+    if nets is None:
+        nets = sample_networks(rng, data.n_clients)
+    sufficient = tra_mod.sufficiency_report(nets, cfg.tra.threshold_mbps)
+    eligible = np.asarray(eligible_mask_device(
+        jnp.asarray(nets.upload_mbps), cfg.selection,
+        eligible_ratio=cfg.eligible_ratio,
+        threshold_mbps=cfg.tra.threshold_mbps))
+    return Scenario(seed=cfg.seed, loss_rate=cfg.tra.loss_rate,
+                    sufficient=sufficient, eligible=eligible, data=data)
+
+
+class SweepEngine:
+    """vmap(scan) executor for S same-shaped scenarios.
+
+    Like ``RoundScanEngine``, the engine is stateless between calls:
+    callers own the stacked ``EngineState`` and thread it through
+    ``run_block``. The passed-in state is DONATED — use the returned
+    state and drop the old reference.
+    """
+
+    def __init__(self, cfg, scenarios: Sequence[Scenario],
+                 device_data: Optional[DeviceDataset] = None):
+        if cfg.algo not in ENGINE_ALGOS:
+            raise ValueError(f"unsupported algo {cfg.algo!r}")
+        if not scenarios:
+            raise ValueError("empty sweep")
+        self.cfg = cfg
+        self.scenarios = list(scenarios)
+        S = len(self.scenarios)
+        self.n_scenarios = S
+        if device_data is not None:
+            self.dd = device_data
+        elif all(s.data is self.scenarios[0].data for s in self.scenarios):
+            # seed/loss grids usually share one dataset draw — stage it
+            # once and broadcast through the vmap (in_axes=None) instead
+            # of stacking S identical (N, M, D) copies on device
+            self.dd = stage_on_device(self.scenarios[0].data)
+        else:
+            self.dd = stage_scenarios_on_device(
+                [s.data for s in self.scenarios])
+        # counts is (N,) when the dataset is shared, (S, N) when stacked
+        self.data_batched = self.dd.counts.ndim == 2
+        self.n_clients = int(self.dd.counts.shape[-1])
+        n_elig = [int(np.asarray(s.eligible).sum()) for s in self.scenarios]
+        if min(n_elig) == 0:
+            raise ValueError("a scenario has no eligible clients")
+        cohorts = {min(cfg.clients_per_round, ne) for ne in n_elig}
+        if len(cohorts) != 1:
+            # the cohort is a static shape — scenarios whose eligible
+            # sets clamp clients_per_round differently can't share a
+            # program
+            raise ValueError(f"scenarios disagree on cohort size: "
+                             f"{sorted(cohorts)}")
+        self.cohort = cohorts.pop()
+        self.ctx = ScenarioCtx(
+            base_key=jnp.stack([jax.random.PRNGKey(s.seed)
+                                for s in self.scenarios]),
+            loss_rate=jnp.asarray([s.loss_rate for s in self.scenarios],
+                                  jnp.float32),
+            eligible=jnp.asarray(np.stack(
+                [np.asarray(s.eligible, bool) for s in self.scenarios])),
+            sufficient=jnp.asarray(np.stack(
+                [np.asarray(s.sufficient, np.float32)
+                 for s in self.scenarios])),
+            data=self.dd)
+        cache_key = (_static_key(cfg), self.cohort, self.data_batched)
+        if cache_key not in _SWEEP_CACHE:
+            step = make_round_step(cfg, self.cohort)
+            ctx_axes = ScenarioCtx(base_key=0, loss_rate=0, eligible=0,
+                                   sufficient=0,
+                                   data=0 if self.data_batched else None)
+            vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
+            _SWEEP_CACHE[cache_key] = (step, jax.jit(
+                lambda ctx, state, ts: jax.lax.scan(
+                    lambda s, t: vstep(ctx, s, t), state, ts),
+                donate_argnums=(1,)))
+        self._step, self._block = _SWEEP_CACHE[cache_key]
+
+    @classmethod
+    def from_configs(cls, cfgs: Sequence[Any],
+                     datas, nets=None) -> "SweepEngine":
+        """Build a sweep from S per-scenario configs (seeds, loss rates
+        and selection policies may differ; static structure must agree).
+
+        ``datas`` is one shared ``FederatedDataset`` or a length-S
+        sequence of per-scenario draws; ``nets`` likewise one shared
+        ``ClientNetworks``, a length-S sequence, or None to sample from
+        each scenario's seed (the ``FederatedServer`` default)."""
+        cfgs = list(cfgs)
+        S = len(cfgs)
+        if S == 0:
+            raise ValueError("empty config grid")
+        sig0 = static_signature(cfgs[0])
+        for i, c in enumerate(cfgs[1:], 1):
+            if static_signature(c) != sig0:
+                raise ValueError(
+                    f"config {i} differs from config 0 in a static "
+                    f"field; only {SWEEP_VARYING_FIELDS} and tra."
+                    f"{SWEEP_VARYING_TRA_FIELDS} may vary in one sweep")
+        if isinstance(datas, FederatedDataset):
+            datas = [datas] * S
+        if len(datas) != S:
+            raise ValueError(f"expected {S} datasets, got {len(datas)}")
+        if nets is None or not isinstance(nets, (list, tuple)):
+            nets = [nets] * S
+        if len(nets) != S:
+            raise ValueError(f"expected {S} networks, got {len(nets)}")
+        nets = [n if n is not None
+                else sample_networks(np.random.default_rng(c.seed),
+                                     d.n_clients)
+                for c, d, n in zip(cfgs, datas, nets)]
+        # batched eligibility staging: one (S, N) device mask covering
+        # every scenario's selection policy
+        eligible = np.asarray(stage_network_scenarios(
+            nets, [c.selection for c in cfgs],
+            eligible_ratios=[c.eligible_ratio for c in cfgs],
+            thresholds_mbps=[c.tra.threshold_mbps for c in cfgs]))
+        scen = [Scenario(seed=c.seed, loss_rate=c.tra.loss_rate,
+                         sufficient=tra_mod.sufficiency_report(
+                             n, c.tra.threshold_mbps),
+                         eligible=eligible[i], data=d)
+                for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]
+        return cls(cfgs[0], scen)
+
+    # -- state --------------------------------------------------------------
+    def init_states(self, param_init=None) -> EngineState:
+        """Stacked per-scenario initial state; params are drawn from each
+        scenario's seed exactly like ``FederatedServer``
+        (``mlp_init(PRNGKey(seed))``). ``param_init`` overrides the
+        per-scenario ``key -> params`` initializer (e.g. a differently
+        sized MLP)."""
+        init = mlp_init if param_init is None else param_init
+        states = [init_engine_state(self.cfg,
+                                    init(jax.random.PRNGKey(s.seed)),
+                                    self.n_clients)
+                  for s in self.scenarios]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    # -- execution ----------------------------------------------------------
+    def run_block(self, states: EngineState, t0: int, k: int
+                  ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Scan rounds [t0, t0+k) of ALL scenarios in one device
+        program; flush logs to host demuxed scenario-major. Returns
+        (states, {"loss": (S, k), "ids": (S, k, C)})."""
+        ts = jnp.arange(t0, t0 + k, dtype=jnp.int32)
+        states, logs = self._block(self.ctx, states, ts)
+        # the scan stacks outputs time-major (k, S, ...); demux to
+        # scenario-major on flush
+        return states, {name: np.moveaxis(np.asarray(v), 0, 1)
+                        for name, v in logs.items()}
+
+    def run(self, n_rounds: Optional[int] = None
+            ) -> Tuple[EngineState, Dict[str, np.ndarray]]:
+        """Whole-grid convenience: init + scan every round in ONE
+        dispatch. Returns (final stacked states, scenario-major logs)."""
+        r = self.cfg.n_rounds if n_rounds is None else n_rounds
+        return self.run_block(self.init_states(), 0, r)

@@ -15,8 +15,9 @@ the paper: Synthetic(0,0) < (0.5,0.5) < (1,1) < (2,2).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
+import jax.tree_util
 import numpy as np
 
 D_FEAT = 60
@@ -28,7 +29,12 @@ class DeviceDataset:
     """Device-resident training data for the round-scan engine: every
     client's train set padded to a common length so a scanned round can
     gather fixed-shape minibatches with per-client ``randint`` bounds
-    (no host round-trip per round)."""
+    (no host round-trip per round).
+
+    Registered as a jax pytree so it can ride through jit/vmap as a
+    traced input — the sweep engine stacks S scenario datasets behind a
+    leading axis ((S, N, M, D) etc., see ``stage_scenarios_on_device``)
+    and vmaps the round step over it."""
     train_x: "jnp.ndarray"   # (N, M, D_FEAT) zero-padded
     train_y: "jnp.ndarray"   # (N, M) zero-padded
     counts: "jnp.ndarray"    # (N,) int32 true samples per client
@@ -36,6 +42,11 @@ class DeviceDataset:
     @property
     def n_clients(self) -> int:
         return int(self.counts.shape[0])
+
+
+jax.tree_util.register_dataclass(
+    DeviceDataset, data_fields=("train_x", "train_y", "counts"),
+    meta_fields=())
 
 
 def stage_on_device(data: "FederatedDataset") -> DeviceDataset:
@@ -54,6 +65,41 @@ def stage_on_device(data: "FederatedDataset") -> DeviceDataset:
         Y[k, :n] = data.train_y[k]
     return DeviceDataset(jnp.asarray(X), jnp.asarray(Y),
                          jnp.asarray(counts.astype(np.int32)))
+
+
+def stage_scenarios_on_device(datasets: Sequence["FederatedDataset"]
+                              ) -> DeviceDataset:
+    """Batched staging for the sweep engine: stack S per-scenario
+    datasets (e.g. alpha/beta heterogeneity re-draws) behind a leading
+    scenario axis.
+
+    All scenarios must hold the same client count N; per-client sets
+    are padded to the max length across ALL scenarios so the stacked
+    tensors are rectangular: train_x (S, N, M, D_FEAT), train_y
+    (S, N, M), counts (S, N). Padding is never sampled (batch indices
+    are drawn in [0, counts) in-scan), so a scenario padded past its
+    own max length computes exactly what its solo staging would.
+    """
+    import jax.numpy as jnp
+    if not datasets:
+        raise ValueError("no scenario datasets")
+    n_set = {d.n_clients for d in datasets}
+    if len(n_set) != 1:
+        raise ValueError(f"scenario client counts differ: {sorted(n_set)}")
+    N = n_set.pop()
+    S = len(datasets)
+    M = max(int(d.samples_per_client.max()) for d in datasets)
+    X = np.zeros((S, N, M, D_FEAT), np.float32)
+    Y = np.zeros((S, N, M), np.int32)
+    counts = np.zeros((S, N), np.int32)
+    for s, d in enumerate(datasets):
+        for k in range(N):
+            n = len(d.train_x[k])
+            X[s, k, :n] = d.train_x[k]
+            Y[s, k, :n] = d.train_y[k]
+            counts[s, k] = n
+    return DeviceDataset(jnp.asarray(X), jnp.asarray(Y),
+                         jnp.asarray(counts))
 
 
 @dataclasses.dataclass

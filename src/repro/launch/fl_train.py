@@ -47,12 +47,18 @@ def _leaf_packet_mask(key, shape, loss_rate, packet_floats: int):
 
 def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                        tra: TRAConfig, n_clients: int):
-    """Returns (fl_step, opt). Batch leaves carry a leading client axis C."""
+    """Returns (fl_step, opt). Batch leaves carry a leading client axis C.
+
+    ``loss_rate`` is an optional traced override of ``tra.loss_rate`` —
+    pass a scalar array to make the drop rate a scenario-varying input
+    (what ``make_fl_sweep_step`` vmaps over); omit it for the classic
+    single-scenario closure-constant behaviour."""
     opt = make_optimizer(tcfg.optimizer, tcfg.lr, momentum=tcfg.momentum,
                          weight_decay=tcfg.weight_decay)
     remat = tcfg.remat != "none"
 
-    def fl_step(params, opt_state, batch, sufficient, key):
+    def fl_step(params, opt_state, batch, sufficient, key, loss_rate=None):
+        rate = tra.loss_rate if loss_rate is None else loss_rate
         # --- thread Client: local gradient computation ------------------
         def client_loss(p, b):
             loss, _ = tf.forward(cfg, p, b, remat=remat)
@@ -70,7 +76,7 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         for li, g in enumerate(leaves):
             lf_shape = g.shape[1:]
             masks = jax.vmap(
-                lambda kc, s: _leaf_packet_mask(kc, lf_shape, tra.loss_rate,
+                lambda kc, s: _leaf_packet_mask(kc, lf_shape, rate,
                                                 tra.packet_floats),
                 in_axes=(0, None))(keys[li], 0)
             # sufficient clients retransmit -> full delivery
@@ -83,7 +89,7 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                 agg = num / den
             elif tra.debias == "group_rate":   # paper Eq. (1), corrected
                 scale = jnp.where(suff.astype(bool), 1.0,
-                                  1.0 / max(1.0 - tra.loss_rate, 1e-6))
+                                  1.0 / jnp.maximum(1.0 - rate, 1e-6))
                 agg = (gm.astype(jnp.float32) * scale).mean(0)
             else:                              # "none": biased mean
                 agg = gm.astype(jnp.float32).mean(0)
@@ -104,6 +110,59 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     return fl_step, opt
 
 
+def make_fl_sweep_step(cfg: ModelConfig, tcfg: TrainConfig,
+                       tra: TRAConfig, n_clients: int):
+    """Scenario-vectorized FL step: vmap ``fl_step`` over a leading
+    scenario axis on (params, opt_state, key, loss_rate), with the batch
+    and sufficiency reports shared — so a whole loss-rate grid of the
+    transformer FL protocol is one compiled program per step.
+
+    Returns (sweep_step, opt); sweep_step(params_S, opt_state_S, batch,
+    sufficient, keys_S, loss_rates_S) -> (params_S, opt_state_S,
+    metrics with leading S)."""
+    fl_step, opt = make_fl_train_step(cfg, tcfg, tra, n_clients)
+    sweep_step = jax.vmap(
+        lambda p, o, b, s, k, r: fl_step(p, o, b, s, k, r),
+        in_axes=(0, 0, None, None, 0, 0))
+    return sweep_step, opt
+
+
+def _run_sweep(cfg, tcfg, tra, args, rates):
+    """Grid route: one model replica per TRA loss rate, all trained by a
+    single vmapped step — the transformer-scale analogue of
+    core/sweep.SweepEngine (scenario axis = loss rate here; seeds via
+    per-scenario keys)."""
+    S, C = len(rates), args.clients
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    sweep_step, opt = make_fl_sweep_step(cfg, tcfg, tra, C)
+    opt_state = opt.init(params)
+
+    def stack(tree):
+        return jax.tree.map(lambda x: jnp.stack([x] * S), tree)
+
+    params_s, opt_s = stack(params), stack(opt_state)
+    sweep_step = jax.jit(sweep_step)
+    loss_rates = jnp.asarray(rates, jnp.float32)
+    sufficient = jnp.asarray(
+        [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
+    rng = np.random.default_rng(0)
+    for i in range(args.steps):
+        batches = [synth_batch(cfg, args.batch, args.seq, rng)
+                   for _ in range(C)]
+        batch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+        keys = jnp.stack([jax.random.PRNGKey(1000 + i + 7919 * s)
+                          for s in range(S)])
+        t0 = time.time()
+        params_s, opt_s, m = sweep_step(params_s, opt_s, batch,
+                                        sufficient, keys, loss_rates)
+        losses = np.asarray(m["loss"])
+        per = " ".join(f"r={r:.2f}:{l:8.4f}"
+                       for r, l in zip(rates, losses))
+        print(f"round {i:4d} {per} ({time.time()-t0:.2f}s)", flush=True)
+        assert np.all(np.isfinite(losses))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
@@ -113,6 +172,10 @@ def main(argv=None):
     ap.add_argument("--insufficient", type=int, default=1,
                     help="# clients with lossy uploads")
     ap.add_argument("--loss-rate", type=float, default=0.1)
+    ap.add_argument("--sweep-loss-rates", default=None,
+                    help="comma-separated TRA loss rates, e.g. "
+                         "'0.0,0.1,0.3': train all scenarios at once as "
+                         "one vmapped program (one compile, S replicas)")
     ap.add_argument("--debias", default="per_coord_count")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
@@ -124,6 +187,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     tcfg = TrainConfig(lr=args.lr)
     tra = TRAConfig(loss_rate=args.loss_rate, debias=args.debias)
+    if args.sweep_loss_rates:
+        rates = [float(x) for x in args.sweep_loss_rates.split(",")]
+        return _run_sweep(cfg, tcfg, tra, args, rates)
     C = args.clients
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     fl_step, opt = make_fl_train_step(cfg, tcfg, tra, C)

@@ -86,6 +86,40 @@ def eligible_mask_device(upload_mbps, selection: str, *,
     raise ValueError(selection)
 
 
+def stage_network_scenarios(nets_list, selections, *,
+                            eligible_ratios=1.0,
+                            thresholds_mbps=DEFAULT_THRESHOLD_MBPS):
+    """Batched staging for the sweep engine: one (S, N) bool device
+    array of per-scenario eligibility masks.
+
+    ``nets_list`` is a sequence of S ``ClientNetworks`` (one network
+    draw per scenario); ``selections`` / ``eligible_ratios`` /
+    ``thresholds_mbps`` are either scalars (broadcast to every
+    scenario) or length-S sequences. Each row matches
+    ``eligible_mask_device`` for that scenario's policy, so a sweep
+    cell selects from exactly the set its single-scenario run would.
+    """
+    import jax.numpy as jnp
+    S = len(nets_list)
+
+    def _bcast(v):
+        if isinstance(v, (list, tuple)):
+            if len(v) != S:
+                raise ValueError(f"expected {S} per-scenario values, "
+                                 f"got {len(v)}")
+            return list(v)
+        return [v] * S
+
+    sels = _bcast(selections)
+    ratios = _bcast(eligible_ratios)
+    thresholds = _bcast(thresholds_mbps)
+    rows = [eligible_mask_device(jnp.asarray(nets.upload_mbps), sel,
+                                 eligible_ratio=r, threshold_mbps=th)
+            for nets, sel, r, th in zip(nets_list, sels, ratios,
+                                        thresholds)]
+    return jnp.stack(rows)
+
+
 def upload_seconds(n_bytes: float, mbps: float, loss: float,
                    retransmit: bool) -> float:
     """Analytic upload-time model (motivates TRA; used by benchmarks only).
