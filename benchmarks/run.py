@@ -1,13 +1,20 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# Headline JSONs land in benchmarks/results/: BENCH_sweep.json (grid
+# amortization) and BENCH_uplink_fused.json (megakernel HBM-pass
+# accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3).
 import argparse
 import sys
 import time
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description="LT-FL benchmark suite")
+    ap = argparse.ArgumentParser(
+        description="LT-FL benchmark suite",
+        epilog="headline artifacts: results/BENCH_sweep.json, "
+               "results/BENCH_uplink_fused.json (see docs/EXPERIMENTS.md)")
     ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark names")
+                    help="substring filter on benchmark names "
+                         "(e.g. --only uplink)")
     ap.add_argument("--skip-fl", action="store_true",
                     help="skip the (slower) federated-learning figures")
     args = ap.parse_args(argv)

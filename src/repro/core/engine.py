@@ -18,8 +18,13 @@ needs lives on device for the whole block:
   * per-client state     — error-feedback memory, SCAFFOLD ``c_i`` and
                            AFL ``lambda`` are scan carries, gathered for
                            the cohort and scattered back each round,
-  * TRA                  — the lossy-upload simulation and debiased
-                           aggregation run fused inside the scan body,
+  * TRA                  — the lossy-upload simulation runs in-scan and
+                           the whole uplink step (EF re-inject, mask,
+                           debias-aggregate, EF update, q-FedAvg norms)
+                           is ONE pass over the packetised uploads via
+                           ``kernels/uplink_fused`` (Pallas megakernel
+                           on TPU, bit-identical jnp reference on
+                           CPU/GPU),
   * logging              — per-round train loss and selected cohorts are
                            accumulated in scan outputs and flushed to
                            host once per block.
@@ -57,6 +62,7 @@ from repro.core import client_updates as cu
 from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
+from repro.kernels.uplink_fused import ops as uplink_ops
 from repro.network.packets import n_packets
 
 ENGINE_ALGOS = ("fedavg", "qfedavg", "pfedme", "perfedavg", "afl",
@@ -106,9 +112,10 @@ def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
     """Debiased weighted aggregate of the (implicitly) masked uploads.
 
     xp: (C, P, F) packetised UNMASKED uploads; pkt_mask: (C, P);
-    weights: (C,). The packet mask, per-mode debias scaling and client
-    weights all fold into a single einsum, so the masked per-client
-    tensor is never materialised. Numerically equivalent to
+    weights: (C,). Reference-path delegate into the uplink megakernel
+    ops (`kernels/uplink_fused`): the packet mask, per-mode debias
+    scaling and client weights fold into a single einsum, so the masked
+    per-client tensor is never materialised. Numerically equivalent to
     ``kernels/tra_agg/ops.tra_aggregate_packed`` on pre-masked inputs
     for every mode in DEBIAS_MODES — locked by
     tests/test_sweep.py::test_fused_agg_matches_kernel_ops.
@@ -118,21 +125,10 @@ def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
     ``group_rate``; ``mult`` scales clients on top of ``weights``
     without entering the denominator (q-FedAvg's F^q factors).
     """
-    q_c = weights if mult is None else weights * mult
-    if mode == "per_client_rate":
-        q_c = q_c / jnp.maximum(kept, 1e-6)
-    elif mode == "group_rate":
-        q_c = q_c * jnp.where(
-            sufficient.astype(bool), 1.0,
-            1.0 / jnp.maximum(1.0 - loss_rate, 1e-6))
-    wm = pkt_mask * q_c[:, None]
-    if mode == "per_coord_count":
-        den = jnp.maximum((pkt_mask * weights[:, None]).sum(0),
-                          1e-12)[:, None]
-    else:
-        den = jnp.maximum(weights.sum(), 1e-12)
-    out = jnp.einsum("cpf,cp->pf", xp, wm) / den
-    return out.reshape(-1)[:d_up]
+    agg, _, _ = uplink_ops.uplink_round(
+        xp, pkt_mask, weights, mode=mode, d_up=d_up, kept=kept,
+        sufficient=sufficient, loss_rate=loss_rate, mult=mult, impl="ref")
+    return agg
 
 
 # FLConfig fields a scenario may vary without changing program structure;
@@ -156,9 +152,14 @@ def _static_key(cfg):
     only — ``astuple`` recurses into the nested TRAConfig). Beyond the
     sweep-varying fields, the round/eval schedule and engine-mode knobs
     are normalised away too: they drive the block loop, never the
-    compiled step, so configs differing only there share programs."""
-    return dataclasses.astuple(dataclasses.replace(
-        static_signature(cfg), n_rounds=0, eval_every=0, engine="scan"))
+    compiled step, so configs differing only there share programs. The
+    resolved uplink implementation (megakernel vs jnp reference — env /
+    backend dependent) changes the traced program, so it is part of the
+    key: flipping ``REPRO_UPLINK_IMPL`` retraces instead of replaying a
+    stale cache entry."""
+    return (dataclasses.astuple(dataclasses.replace(
+        static_signature(cfg), n_rounds=0, eval_every=0, engine="scan")),
+        uplink_ops.resolved_impl())
 
 
 # step/jit cache shared across engine instances: scenario-varying values
@@ -279,11 +280,11 @@ def make_round_step(cfg, cohort: int):
                 in_axes=(None, 0, 0))(params, X, Y)
             flat = flatten_clients(uploads, C)               # (C, D)
 
-        # TRA lossy upload + debiased aggregation, fused in-scan via
-        # fused_debias_aggregate (only error feedback needs the masked
-        # per-client tensor explicitly).
-        if ef:
-            flat = flat + state.ef_mem[ids]
+        # TRA uplink: EF re-inject, lossy-upload mask, per-mode debias
+        # aggregation, the new EF memory rows and (q-FedAvg) the masked
+        # squared norms — ONE pass over the (C, P, F) uploads through
+        # the kernels/uplink_fused megakernel ops (compiled Pallas on
+        # TPU; the bit-identical jnp reference elsewhere).
         pad = P * F - D_up
         xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
         if tra_cfg.enabled:
@@ -292,9 +293,6 @@ def make_round_step(cfg, cohort: int):
             pkt_mask = 1.0 - lost.astype(jnp.float32)
         else:
             pkt_mask = jnp.ones((C, P))
-        new_ef = state.ef_mem.at[ids].set(
-            (xp * (1.0 - pkt_mask[:, :, None])
-             ).reshape(C, P * F)[:, :D_up]) if ef else state.ef_mem
 
         kept = None
         if debias == "per_client_rate":
@@ -302,16 +300,29 @@ def make_round_step(cfg, cohort: int):
             pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
             kept = (pkt_mask @ pcnt) / D_up
 
-        def fused_agg(w, mult=None):
-            return fused_debias_aggregate(
-                xp, pkt_mask, w, mode=debias, d_up=D_up, kept=kept,
-                sufficient=suff, loss_rate=ctx.loss_rate, mult=mult)
+        # aggregation weights per algorithm (q-FedAvg scales clients by
+        # F_k^q outside the denominator and needs the masked norms)
+        if algo == "qfedavg":
+            eps = 1e-10
+            fq = jnp.power(aux["loss0"] + eps, cfg.q)
+            w_agg, mult, want_ssq = jnp.ones(C), fq, True
+        elif algo == "afl":
+            w_agg, mult, want_ssq = state.lam[ids], None, False
+        else:
+            w_agg, mult, want_ssq = weights, None, False
+
+        agg, new_ef_rows, ssq = uplink_ops.uplink_round(
+            xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
+            ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
+            sufficient=suff, loss_rate=ctx.loss_rate, mult=mult,
+            want_ssq=want_ssq)
+        new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
+            else state.ef_mem
 
         # server update per algorithm
         c_global_new, c_i_new, lam_new = \
             state.c_global, state.c_i, state.lam
         if algo == "scaffold":
-            agg = fused_agg(weights)
             D = dw.shape[1]
             dw_agg, dc_agg = agg[:D], agg[D:]
             new_vec = old_vec + dw_agg
@@ -319,21 +330,18 @@ def make_round_step(cfg, cohort: int):
             c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
         elif algo == "qfedavg":
             # delta_k = F_k^q dw_k;  h_k = q F^(q-1)||dw||^2 + L F^q
-            eps = 1e-10
-            fq = jnp.power(aux["loss0"] + eps, cfg.q)
-            ssq = ((xp * xp).sum(-1) * pkt_mask).sum(-1)
             h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
                 * ssq + cfg.lipschitz * fq
             # debiased SUM of deltas = debiased mean * C
-            agg = fused_agg(jnp.ones(C), mult=fq) * C
-            new_vec = old_vec - agg / jnp.maximum(h.sum(), 1e-8)
+            agg_sum = agg * C
+            new_vec = old_vec - agg_sum / jnp.maximum(h.sum(), 1e-8)
         elif algo == "afl":
-            new_vec = fused_agg(state.lam[ids])
+            new_vec = agg
         elif algo == "pfedme":
             new_vec = (1 - cfg.pfedme_beta) * old_vec \
-                + cfg.pfedme_beta * fused_agg(weights)
+                + cfg.pfedme_beta * agg
         else:  # fedavg / perfedavg: weighted mean of uploaded models
-            new_vec = fused_agg(weights)
+            new_vec = agg
         new_params = unflatten_like(new_vec, params)
 
         if algo == "afl":

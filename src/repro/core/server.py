@@ -3,9 +3,11 @@
 Execution is delegated to the device-resident round-scan engine
 (`core/engine.py`): the whole round — on-device client selection,
 vmapped local training over the cohort, simulated lossy uploads (TRA)
-or reliable uploads (threshold mode), debiased aggregation — is one
-compiled step, and ``run`` scans *blocks* of rounds in a single device
-program, flushing loss logs at evaluation boundaries. ``run_round``
+or reliable uploads (threshold mode), debiased aggregation fused with
+the error-feedback update into one pass over the uploads
+(`kernels/uplink_fused`) — is one compiled step, and ``run`` scans
+*blocks* of rounds in a single device program, flushing loss logs at
+evaluation boundaries. ``run_round``
 executes the same step once per call (the per-round reference path),
 so the two paths are fixed-seed equivalent (tests/test_engine.py).
 

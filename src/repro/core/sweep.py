@@ -29,6 +29,12 @@ sweep per static signature).
 The stacked ``EngineState`` is donated into the sweep jit, so the
 (S, N, D_up) error-feedback and SCAFFOLD buffers are updated in place
 rather than copied every block.
+
+On TPU the round step's fused uplink (`kernels/uplink_fused`) rides
+this vmap through its ``custom_vmap`` rule: the S scenarios' uplink
+becomes ONE scenario-batched megakernel launch over the (S, C, P, F)
+uploads, bit-identical to S single-scenario calls
+(tests/test_uplink_fused.py).
 """
 from __future__ import annotations
 

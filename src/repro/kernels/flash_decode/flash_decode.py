@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -61,11 +63,12 @@ def _kernel(q_ref, k_ref, v_ref, b_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("t_blk", "interpret"))
 def flash_decode_call(q, k, v, bias, *, t_blk: int = 512,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """q: (B, KV, G, dh); k, v: (B, T, KV, dh); bias: (T,) additive mask.
 
     Returns (B, KV, G, dh) attention output, f32 accumulation.
-    """
+    ``interpret=None`` resolves from the backend at call time."""
+    interpret = resolve_interpret(interpret)
     B, KV, G, dh = q.shape
     T = k.shape[1]
     blk = min(t_blk, T)

@@ -7,9 +7,9 @@ models/attention.py remains the default for lowering portability.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_lowering
 from repro.kernels.flash_decode.flash_decode import NEG_INF, flash_decode_call
 from repro.kernels.flash_decode.ref import flash_decode_ref
 
@@ -27,7 +27,8 @@ def decode_bias(T: int, pos, window=None, is_global=None) -> jnp.ndarray:
 
 
 def flash_decode(q, k, v, pos, *, window=None, is_global=None,
-                 t_blk: int = 512, use_kernel: bool | None = None):
+                 t_blk: int = 512, use_kernel: bool | None = None,
+                 interpret: bool | None = None):
     """q: (B,1,H,dh) or (B,H,dh); k,v: (B,T,KV,dh). Returns (B,H,dh) f32."""
     squeeze = False
     if q.ndim == 4:
@@ -38,12 +39,13 @@ def flash_decode(q, k, v, pos, *, window=None, is_global=None,
     G = H // KV
     qg = q.reshape(B, KV, G, dh)
     bias = decode_bias(T, pos, window, is_global)
-    if use_kernel is None:
-        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    # no GPU lowering: the online-softmax carry lives in VMEM scratch
+    # across Mosaic's sequential T-grid; GPU falls back to the jnp ref.
+    use_kernel, interpret = resolve_lowering(
+        gpu_lowerable=False, use_kernel=use_kernel, interpret=interpret)
     if use_kernel and T % min(t_blk, T) == 0:
-        interp = jax.default_backend() != "tpu"
         out = flash_decode_call(qg, k, v, bias, t_blk=t_blk,
-                                interpret=interp)
+                                interpret=interpret)
     else:
         out = flash_decode_ref(qg, k, v, bias)
     return out.reshape(B, H, dh)

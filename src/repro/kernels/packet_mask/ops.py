@@ -1,31 +1,28 @@
 """jit'd public wrapper: apply a per-packet delivery mask to a flat update."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_lowering
 from repro.kernels.packet_mask.packet_mask import packet_mask_call
 from repro.kernels.packet_mask.ref import packet_mask_ref
 
 
-def _use_kernel() -> bool:
-    return jax.default_backend() in ("tpu", "cpu")
-
-
 def apply_packet_mask(vec: jnp.ndarray, pkt_mask: jnp.ndarray,
                       packet_floats: int = 256,
-                      use_kernel: bool | None = None) -> jnp.ndarray:
+                      use_kernel: bool | None = None,
+                      interpret: bool | None = None) -> jnp.ndarray:
     """vec: (D,); pkt_mask: (P,) with P = ceil(D/packet_floats) -> (D,)."""
     D = vec.shape[0]
     P = pkt_mask.shape[0]
     pad = P * packet_floats - D
     x = jnp.pad(vec, (0, pad)).reshape(P, packet_floats)
-    if use_kernel is None:
-        use_kernel = _use_kernel()
+    # pure element-wise body: lowers on GPU (Triton) as well as TPU
+    use_kernel, interpret = resolve_lowering(
+        gpu_lowerable=True, use_kernel=use_kernel, interpret=interpret)
     if use_kernel and P % 8 == 0:
-        interp = jax.default_backend() != "tpu"
         bp = 64 if P % 64 == 0 else 8
-        out = packet_mask_call(x, pkt_mask, block_p=bp, interpret=interp)
+        out = packet_mask_call(x, pkt_mask, block_p=bp, interpret=interpret)
     else:
         out = packet_mask_ref(x, pkt_mask)
     return out.reshape(-1)[:D]

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(x_ref, m_ref, o_ref):
     # x: (BP, F) packet payloads; m: (BP,) delivery bits
@@ -22,8 +24,12 @@ def _kernel(x_ref, m_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def packet_mask_call(x: jnp.ndarray, mask: jnp.ndarray, *,
-                     block_p: int = 64, interpret: bool = True) -> jnp.ndarray:
-    """x: (P, F) float; mask: (P,) float 0/1 -> (P, F)."""
+                     block_p: int = 64,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """x: (P, F) float; mask: (P,) float 0/1 -> (P, F).
+
+    ``interpret=None`` resolves from the backend at call time."""
+    interpret = resolve_interpret(interpret, gpu_lowerable=True)
     P, F = x.shape
     bp = min(block_p, P)
     assert P % bp == 0, (P, bp)

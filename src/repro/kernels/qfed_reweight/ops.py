@@ -8,16 +8,17 @@ through here — its scan body computes the same delta/h math inline
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_lowering
 from repro.kernels.qfed_reweight.qfed_reweight import qfed_reweight_call
 from repro.kernels.qfed_reweight.ref import qfed_reweight_ref
 
 
 def qfed_reweight_packed(x: jnp.ndarray, losses: jnp.ndarray, q: float,
                          lipschitz: float,
-                         use_kernel: bool | None = None):
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None):
     """x: (C, P, F) pseudo-gradients (zero-padded); losses: (C,) F_k >= 0.
 
     Returns (delta (C, P, F), h (C,)) per q-FedAvg:
@@ -27,12 +28,14 @@ def qfed_reweight_packed(x: jnp.ndarray, losses: jnp.ndarray, q: float,
     C, P, F = x.shape
     eps = 1e-10
     fq = jnp.power(losses + eps, q)
-    if use_kernel is None:
-        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    # no GPU lowering: the cross-grid ssq accumulation relies on
+    # Mosaic's sequential grid; GPU falls back to the jnp reference.
+    use_kernel, interpret = resolve_lowering(
+        gpu_lowerable=False, use_kernel=use_kernel, interpret=interpret)
     if use_kernel and P % 8 == 0:
         bp = 16 if P % 16 == 0 else 8
-        interp = jax.default_backend() != "tpu"
-        delta, ssq = qfed_reweight_call(x, fq, block_p=bp, interpret=interp)
+        delta, ssq = qfed_reweight_call(x, fq, block_p=bp,
+                                        interpret=interpret)
     else:
         delta, ssq = qfed_reweight_ref(x, fq)
     h = q * jnp.power(losses + eps, q - 1) * ssq + lipschitz * fq
@@ -41,7 +44,8 @@ def qfed_reweight_packed(x: jnp.ndarray, losses: jnp.ndarray, q: float,
 
 def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
                   lipschitz: float, packet_floats: int = 256,
-                  use_kernel: bool | None = None):
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None):
     """dw: (C, D) pseudo-gradients; losses: (C,) client losses F_k (>=0).
 
     Returns (delta (C, D), h (C,)); see ``qfed_reweight_packed``.
@@ -51,5 +55,6 @@ def qfed_reweight(dw: jnp.ndarray, losses: jnp.ndarray, q: float,
     pad = P * packet_floats - D
     x = jnp.pad(dw, ((0, 0), (0, pad))).reshape(C, P, packet_floats)
     delta, h = qfed_reweight_packed(x, losses, q, lipschitz,
-                                    use_kernel=use_kernel)
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
     return delta.reshape(C, -1)[:, :D], h

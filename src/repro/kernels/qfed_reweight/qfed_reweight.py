@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(dw_ref, fq_ref, delta_ref, ssq_ref):
     dw = dw_ref[...]                       # (C, BP, F) f32
@@ -29,10 +31,12 @@ def _kernel(dw_ref, fq_ref, delta_ref, ssq_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def qfed_reweight_call(dw: jnp.ndarray, fq: jnp.ndarray, *,
-                       block_p: int = 16, interpret: bool = True):
+                       block_p: int = 16, interpret: bool | None = None):
     """dw: (C, P, F); fq = F_k^q: (C,).
 
-    Returns (delta (C,P,F) f32, ssq (C,) = ||dw_k||^2)."""
+    Returns (delta (C,P,F) f32, ssq (C,) = ||dw_k||^2).
+    ``interpret=None`` resolves from the backend at call time."""
+    interpret = resolve_interpret(interpret)
     C, P, F = dw.shape
     bp = min(block_p, P)
     assert P % bp == 0

@@ -19,11 +19,11 @@ definitions below must be mirrored there.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.tra_agg.tra_agg import tra_agg_call
+from repro.kernels.common import RATE_EPS, resolve_lowering
 from repro.kernels.tra_agg.ref import tra_agg_ref
+from repro.kernels.tra_agg.tra_agg import tra_agg_call
 
 DEBIAS_MODES = ("per_coord_count", "per_client_rate", "group_rate", "none")
 
@@ -39,7 +39,8 @@ def tra_aggregate_packed(x: jnp.ndarray, pkt_mask: jnp.ndarray,
                          weights: jnp.ndarray, *,
                          mode: str = "per_coord_count", kept_frac=None,
                          nominal_rate=None, sufficient=None,
-                         use_kernel: bool | None = None) -> jnp.ndarray:
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None) -> jnp.ndarray:
     """Debias + aggregate a packetised update tensor.
 
     x: (C, P, F) already masked; pkt_mask: (C, P); weights: (C,).
@@ -54,14 +55,14 @@ def tra_aggregate_packed(x: jnp.ndarray, pkt_mask: jnp.ndarray,
         # scale each client by 1/kept, then average with FULL denominator:
         # out = sum w_c (m_c x_c / kept_c) / sum w_c
         assert kept_frac is not None
-        x = x / jnp.maximum(kept_frac, 1e-6)[:, None, None]
+        x = x / jnp.maximum(kept_frac, RATE_EPS)[:, None, None]
         m = jnp.ones_like(pkt_mask)
         w = weights
     elif mode == "group_rate":
         # paper Eq.(1), corrected: insufficient scaled by 1/(1-r)
         assert nominal_rate is not None and sufficient is not None
         scale = jnp.where(sufficient.astype(bool), 1.0,
-                          1.0 / jnp.maximum(1.0 - nominal_rate, 1e-6))
+                          1.0 / jnp.maximum(1.0 - nominal_rate, RATE_EPS))
         x = x * scale[:, None, None]
         m = jnp.ones_like(pkt_mask)
         w = weights
@@ -69,12 +70,13 @@ def tra_aggregate_packed(x: jnp.ndarray, pkt_mask: jnp.ndarray,
         m = jnp.ones_like(pkt_mask)
         w = weights
 
-    if use_kernel is None:
-        use_kernel = jax.default_backend() in ("tpu", "cpu")
+    # no GPU lowering: the body is an MXU-tiled einsum reduction
+    # (Mosaic-specific); GPU falls back to the jnp reference.
+    use_kernel, interpret = resolve_lowering(
+        gpu_lowerable=False, use_kernel=use_kernel, interpret=interpret)
     if use_kernel and P % 8 == 0:
         bp = 16 if P % 16 == 0 else 8
-        interp = jax.default_backend() != "tpu"
-        return tra_agg_call(x, m, w, block_p=bp, interpret=interp)
+        return tra_agg_call(x, m, w, block_p=bp, interpret=interpret)
     return tra_agg_ref(x, m, w)
 
 
@@ -82,7 +84,8 @@ def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
                   weights: jnp.ndarray, *, mode: str = "per_coord_count",
                   kept_frac=None, nominal_rate=None, sufficient=None,
                   packet_floats: int = 256,
-                  use_kernel: bool | None = None) -> jnp.ndarray:
+                  use_kernel: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
     """updates: (C, D) already masked; pkt_mask: (C, P); weights: (C,).
 
     Returns the (D,) aggregated update. ``weights`` need not be normalised.
@@ -91,5 +94,6 @@ def tra_aggregate(updates: jnp.ndarray, pkt_mask: jnp.ndarray,
     out = tra_aggregate_packed(x, pkt_mask, weights, mode=mode,
                                kept_frac=kept_frac,
                                nominal_rate=nominal_rate,
-                               sufficient=sufficient, use_kernel=use_kernel)
+                               sufficient=sufficient, use_kernel=use_kernel,
+                               interpret=interpret)
     return out.reshape(-1)[:D]

@@ -1,8 +1,10 @@
 """Pure-jnp oracle for the tra_agg kernel."""
 import jax.numpy as jnp
 
+from repro.kernels.common import DENOM_EPS
 
-def tra_agg_ref(x, mask, w, eps=1e-12):
+
+def tra_agg_ref(x, mask, w, eps=DENOM_EPS):
     """x: (C,P,F); mask: (C,P); w: (C,) -> (P,F)."""
     wm = mask.astype(jnp.float32) * w.astype(jnp.float32)[:, None]   # (C,P)
     num = jnp.einsum("cpf,cp->pf", x.astype(jnp.float32), wm)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import DENOM_EPS, resolve_interpret
+
 
 def _kernel(x_ref, m_ref, w_ref, o_ref, *, eps):
     x = x_ref[...]                       # (C, BP, F)
@@ -37,9 +39,13 @@ def _kernel(x_ref, m_ref, w_ref, o_ref, *, eps):
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def tra_agg_call(x: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray, *,
-                 block_p: int = 16, interpret: bool = True,
-                 eps: float = 1e-12) -> jnp.ndarray:
-    """x: (C, P, F); mask: (C, P); w: (C,) -> (P, F) debiased aggregate."""
+                 block_p: int = 16, interpret: bool | None = None,
+                 eps: float = DENOM_EPS) -> jnp.ndarray:
+    """x: (C, P, F); mask: (C, P); w: (C,) -> (P, F) debiased aggregate.
+
+    ``interpret=None`` resolves from the backend at call time: compiled
+    on TPU, interpreter emulation where no lowering exists."""
+    interpret = resolve_interpret(interpret)
     C, P, F = x.shape
     bp = min(block_p, P)
     assert P % bp == 0, (P, bp)

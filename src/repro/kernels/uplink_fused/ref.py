@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the uplink megakernel.
+
+This IS the pre-megakernel engine uplink math, expression for
+expression: the EF re-inject (`flat + ef` before packing commutes with
+zero-padding, so adding in packet space is bit-equal), the single
+debias-aggregate einsum of ``fused_debias_aggregate``, the EF-update
+product and q-FedAvg's masked squared norms. The engine's CPU path runs
+THIS function (there is no compiled CPU lowering), which is what keeps
+round outputs bit-identical to the pre-megakernel scan; the kernel is
+bit-locked against it in tests/test_uplink_fused.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import DENOM_EPS
+
+
+def uplink_ref(x, m, q, w_or_den, *, ef=None, want_ssq=False,
+               per_coord: bool, eps: float = DENOM_EPS):
+    """x: (C, P, F) unmasked uploads; ef: (C, P, F) or None; m: (C, P);
+    q: (C,) pre-folded debias scales; ``w_or_den`` as in
+    ``uplink_fused_call`` (raw weights (C,) when ``per_coord``, ready
+    scalar denominator otherwise).
+
+    Returns (agg (P, F) f32, ef_out (C, P, F) | None, ssq (C,) | None).
+    """
+    x = x.astype(jnp.float32)
+    if ef is not None:
+        x = x + ef.astype(jnp.float32)
+    wm = m * q[:, None]
+    num = jnp.einsum("cpf,cp->pf", x, wm)
+    if per_coord:
+        den = jnp.maximum((m * w_or_den[:, None]).sum(0), eps)[:, None]
+    else:
+        den = w_or_den
+    agg = num / den
+    ef_out = x * (1.0 - m[:, :, None]) if ef is not None else None
+    ssq = ((x * x).sum(-1) * m).sum(-1) if want_ssq else None
+    return agg, ef_out, ssq

@@ -1,0 +1,280 @@
+"""Pallas TPU megakernel: the whole TRA uplink step in ONE pass over the
+packetised upload tensor.
+
+For a cohort of C clients whose uploads are viewed as (C, P, F) packets
+(F = 256 f32 coords = one 1 KiB UDP payload), with per-packet delivery
+masks m (C, P), per-client debias scales q (C,) (all four DEBIAS_MODES
+pre-folded by ops.py) and raw aggregation weights w (C,), the kernel
+computes — in a single read of x (and of the error-feedback memory ef):
+
+    x_eff[c, p, f] = x[c, p, f] + ef[c, p, f]            (EF re-inject)
+    agg[p, f]      = sum_c q[c] m[c, p] x_eff[c, p, f]
+                     / den[p]                             (debias-agg)
+    ef_out[c,p,f]  = x_eff[c, p, f] * (1 - m[c, p])       (EF update)
+    ssq[c]         = sum_p m[c, p] sum_f x_eff[c, p, f]^2 (q-FedAvg h_k)
+
+where den is either the per-coordinate masked weight sum
+``sum_c w[c] m[c, p]`` (``per_coord_count``, accumulated in the same
+pass) or a precomputed scalar ``max(sum_c w[c], DENOM_EPS)`` (all other
+modes). The unfused chain (EF add, mask multiply, einsum aggregate, EF
+scatter source) reads the (C, P, F) tensor >= 3 times and writes the
+EF-adjusted intermediate once; this kernel reads x and ef once each and
+writes only the true outputs.
+
+Tiling: grid (P//bp, C//bc) — C innermost, so on TPU (sequential grid)
+the (bp, F) fp32 aggregate accumulator and the (bp,) denominator live in
+VMEM scratch across the client loop while the output tile's block index
+stays fixed; the aggregate is divided and written once on the last
+client step. EF tiles stream through: each grid cell reads a
+(bc, bp, F) tile of x/ef and writes the matching ef_out tile.
+
+bf16-stream / fp32-accumulate contract: x and ef may arrive as bf16
+(halving HBM traffic); every tile is upcast to fp32 on load, the
+aggregate and ssq accumulate in fp32, and ef_out is written back in the
+stream dtype. The f32 default is bit-exact against ref.py (locked by
+tests/test_uplink_fused.py).
+
+``uplink_fused_batched_call`` is the scenario-batched variant: a leading
+S grid axis over (S, C, P, F) inputs, same body, so `core/sweep.py`
+grids ride the SAME kernel — ops.py wires it in as the jax.vmap rule of
+the single-scenario call (`jax.custom_batching.custom_vmap`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import DENOM_EPS, resolve_interpret
+
+# Autotune tables: backend -> (block_p thresholds, block_c thresholds),
+# each a ((dim_at_least, block), ...) ladder. Preferences are clamped to
+# the largest divisor of the actual dim, so any (C, P) lowers. TPU rows
+# keep (bc, bp, F) tiles in the 0.5-2 MiB VMEM sweet spot at F = 256;
+# CPU rows only matter for interpret-mode emulation speed.
+_AUTOTUNE = {
+    "tpu": ((((512, 64), (128, 32), (32, 16), (0, 8))),
+            (((64, 16), (16, 8), (0, 4)))),
+    "gpu": ((((512, 32), (0, 16))),
+            (((32, 8), (0, 4)))),
+    "cpu": ((((256, 16), (0, 8))),
+            (((16, 8), (0, 4)))),
+}
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    for d in range(min(n, k), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_blocks(C: int, P: int, block_p: int | None = None,
+                block_c: int | None = None):
+    """(block_p, block_c) from the backend autotune table, clamped to
+    divisors of the actual dims; explicit arguments override the table
+    (still clamped)."""
+    tp, tc = _AUTOTUNE.get(jax.default_backend(), _AUTOTUNE["cpu"])
+    if block_p is None:
+        block_p = next(b for t, b in tp if P >= t)
+    if block_c is None:
+        block_c = next(b for t, b in tc if C >= t)
+    return _largest_divisor_leq(P, block_p), _largest_divisor_leq(C, block_c)
+
+
+def _body(x, ef, m, q, wden, den, agg_at, efo_at, ssq_at,
+          acc_ref, den_acc_ref, ci, *, nc, per_coord, eps, out_dtype):
+    """One grid cell; shared by the single-scenario and scenario-batched
+    kernels (which differ only in the leading-axis slicing of refs)."""
+    x = x.astype(jnp.float32)
+    if ef is not None:
+        x = x + ef.astype(jnp.float32)            # EF re-inject, fp32
+    wm = m * q                                    # (bc, bp)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        den_acc_ref[...] = jnp.zeros_like(den_acc_ref)
+
+    acc_ref[...] += jnp.einsum("cpf,cp->pf", x, wm)
+    if per_coord:
+        den_acc_ref[...] += jnp.sum(m * wden, axis=0)
+    if efo_at is not None:
+        efo_at[...] = (x * (1.0 - m[..., None])).astype(out_dtype)
+    if ssq_at is not None:
+        ssq_at[...] = ((x * x).sum(-1) * m).sum(-1)[:, None]
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        if per_coord:
+            d = jnp.maximum(den_acc_ref[...], eps)[:, None]
+        else:
+            d = den                               # pre-guarded scalar
+        agg_at[...] = acc_ref[...] / d
+
+
+def _unpack(refs, has_ef, per_coord, want_ssq):
+    """Split the flat pallas ref list back into named operands."""
+    it = iter(refs)
+    x = next(it)
+    ef = next(it) if has_ef else None
+    m, q = next(it), next(it)
+    wden = next(it) if per_coord else None
+    den = None if per_coord else next(it)
+    agg = next(it)
+    efo = next(it) if has_ef else None
+    ssq = next(it) if want_ssq else None
+    acc, den_acc = next(it), next(it)
+    return x, ef, m, q, wden, den, agg, efo, ssq, acc, den_acc
+
+
+def _kernel_single(*refs, nc, per_coord, has_ef, want_ssq, eps, out_dtype):
+    x, ef, m, q, wden, den, agg, efo, ssq, acc, den_acc = _unpack(
+        refs, has_ef, per_coord, want_ssq)
+    _body(x[...], ef[...] if ef is not None else None, m[...], q[...],
+          wden[...] if wden is not None else None,
+          den[0, 0] if den is not None else None,
+          agg, efo, ssq, acc, den_acc, pl.program_id(1),
+          nc=nc, per_coord=per_coord, eps=eps, out_dtype=out_dtype)
+
+
+def _kernel_batched(*refs, nc, per_coord, has_ef, want_ssq, eps, out_dtype):
+    x, ef, m, q, wden, den, agg, efo, ssq, acc, den_acc = _unpack(
+        refs, has_ef, per_coord, want_ssq)
+    _body(x[0], ef[0] if ef is not None else None, m[0], q[0],
+          wden[0] if wden is not None else None,
+          den[0, 0, 0] if den is not None else None,
+          agg.at[0], efo.at[0] if efo is not None else None,
+          ssq.at[0] if ssq is not None else None,
+          acc, den_acc, pl.program_id(2),
+          nc=nc, per_coord=per_coord, eps=eps, out_dtype=out_dtype)
+
+
+def uplink_fused_call(x, m, q, w_or_den, *, ef=None, want_ssq=False,
+                      block_p: int | None = None, block_c: int | None = None,
+                      interpret: bool | None = None, eps: float = DENOM_EPS,
+                      per_coord: bool):
+    """Single-scenario megakernel call.
+
+    x: (C, P, F) packetised UNMASKED uploads, f32 or bf16 (the stream
+    dtype); ef: matching (C, P, F) error-feedback tile or None;
+    m: (C, P) f32 delivery mask; q: (C,) f32 pre-folded debias scales.
+    ``w_or_den``: per-client raw weights (C,) when ``per_coord`` (the
+    kernel accumulates the per-coordinate denominator itself), else the
+    READY scalar denominator () — already ``max(sum w, DENOM_EPS)``.
+
+    Returns (agg (P, F) f32, ef_out (C, P, F) stream-dtype | None,
+    ssq (C, P//block_p) f32 partials | None — sum axis 1 for ||.||^2).
+    """
+    C, P, F = x.shape
+    bp, bc = pick_blocks(C, P, block_p, block_c)
+    gp, nc = P // bp, C // bc
+    interpret = resolve_interpret(interpret)
+    has_ef = ef is not None
+
+    in_specs = [pl.BlockSpec((bc, bp, F), lambda p, c: (c, p, 0))]
+    operands = [x]
+    if has_ef:
+        in_specs.append(pl.BlockSpec((bc, bp, F), lambda p, c: (c, p, 0)))
+        operands.append(ef.astype(x.dtype))
+    in_specs += [pl.BlockSpec((bc, bp), lambda p, c: (c, p)),
+                 pl.BlockSpec((bc, 1), lambda p, c: (c, 0))]
+    operands += [m.astype(jnp.float32), q.astype(jnp.float32)[:, None]]
+    if per_coord:
+        in_specs.append(pl.BlockSpec((bc, 1), lambda p, c: (c, 0)))
+        operands.append(w_or_den.astype(jnp.float32)[:, None])
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda p, c: (0, 0)))
+        operands.append(jnp.asarray(w_or_den, jnp.float32).reshape(1, 1))
+
+    out_specs = [pl.BlockSpec((bp, F), lambda p, c: (p, 0))]
+    out_shape = [jax.ShapeDtypeStruct((P, F), jnp.float32)]
+    if has_ef:
+        out_specs.append(pl.BlockSpec((bc, bp, F), lambda p, c: (c, p, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((C, P, F), x.dtype))
+    if want_ssq:
+        out_specs.append(pl.BlockSpec((bc, 1), lambda p, c: (c, p)))
+        out_shape.append(jax.ShapeDtypeStruct((C, gp), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel_single, nc=nc, per_coord=per_coord,
+                          has_ef=has_ef, want_ssq=want_ssq, eps=eps,
+                          out_dtype=x.dtype),
+        grid=(gp, nc),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bp, F), jnp.float32),   # agg accum
+                        pltpu.VMEM((bp,), jnp.float32)],    # den accum
+        interpret=interpret,
+    )(*operands)
+    outs = list(outs)
+    agg = outs.pop(0)
+    ef_out = outs.pop(0) if has_ef else None
+    ssq = outs.pop(0) if want_ssq else None
+    return agg, ef_out, ssq
+
+
+def uplink_fused_batched_call(x, m, q, w_or_den, *, ef=None, want_ssq=False,
+                              block_p: int | None = None,
+                              block_c: int | None = None,
+                              interpret: bool | None = None,
+                              eps: float = DENOM_EPS, per_coord: bool):
+    """Scenario-batched megakernel: a leading S grid axis over
+    (S, C, P, F) inputs, same body as ``uplink_fused_call`` — the sweep
+    engine's whole grid rides one kernel launch. Shapes follow the
+    single call with a leading S on every operand (``w_or_den`` is (S, C)
+    when ``per_coord``, else (S,) ready scalars)."""
+    S, C, P, F = x.shape
+    bp, bc = pick_blocks(C, P, block_p, block_c)
+    gp, nc = P // bp, C // bc
+    interpret = resolve_interpret(interpret)
+    has_ef = ef is not None
+
+    in_specs = [pl.BlockSpec((1, bc, bp, F), lambda s, p, c: (s, c, p, 0))]
+    operands = [x]
+    if has_ef:
+        in_specs.append(
+            pl.BlockSpec((1, bc, bp, F), lambda s, p, c: (s, c, p, 0)))
+        operands.append(ef.astype(x.dtype))
+    in_specs += [pl.BlockSpec((1, bc, bp), lambda s, p, c: (s, c, p)),
+                 pl.BlockSpec((1, bc, 1), lambda s, p, c: (s, c, 0))]
+    operands += [m.astype(jnp.float32), q.astype(jnp.float32)[..., None]]
+    if per_coord:
+        in_specs.append(pl.BlockSpec((1, bc, 1), lambda s, p, c: (s, c, 0)))
+        operands.append(w_or_den.astype(jnp.float32)[..., None])
+    else:
+        in_specs.append(pl.BlockSpec((1, 1, 1), lambda s, p, c: (s, 0, 0)))
+        operands.append(
+            jnp.asarray(w_or_den, jnp.float32).reshape(S, 1, 1))
+
+    out_specs = [pl.BlockSpec((1, bp, F), lambda s, p, c: (s, p, 0))]
+    out_shape = [jax.ShapeDtypeStruct((S, P, F), jnp.float32)]
+    if has_ef:
+        out_specs.append(
+            pl.BlockSpec((1, bc, bp, F), lambda s, p, c: (s, c, p, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((S, C, P, F), x.dtype))
+    if want_ssq:
+        out_specs.append(pl.BlockSpec((1, bc, 1), lambda s, p, c: (s, c, p)))
+        out_shape.append(jax.ShapeDtypeStruct((S, C, gp), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel_batched, nc=nc, per_coord=per_coord,
+                          has_ef=has_ef, want_ssq=want_ssq, eps=eps,
+                          out_dtype=x.dtype),
+        grid=(S, gp, nc),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bp, F), jnp.float32),
+                        pltpu.VMEM((bp,), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    outs = list(outs)
+    agg = outs.pop(0)
+    ef_out = outs.pop(0) if has_ef else None
+    ssq = outs.pop(0) if want_ssq else None
+    return agg, ef_out, ssq

@@ -1,0 +1,95 @@
+"""CI smoke: interpret-mode Pallas kernels vs their pure-jnp oracles.
+
+Forces ``use_kernel=True`` through every kernel package's ops entry
+point (on CI's CPU that resolves to interpret-mode emulation — the same
+lowering path tests exercise) and asserts against the reference. A
+cheap, fast tripwire for kernel/reference drift that runs before the
+full suite; the exhaustive parametrised coverage lives in
+tests/test_kernels.py and tests/test_uplink_fused.py.
+
+Usage: PYTHONPATH=src python tools/kernel_parity_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _check(name, a, b, rtol=2e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol, err_msg=name)
+    print(f"OK  {name}")
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    C, P, F = 4, 16, 256
+    D = P * F - 7
+
+    # packet_mask -----------------------------------------------------------
+    from repro.kernels.packet_mask.ops import apply_packet_mask
+    vec = jnp.asarray(rng.normal(size=D).astype(np.float32))
+    m1 = jnp.asarray((rng.random(P) > 0.3).astype(np.float32))
+    _check("packet_mask",
+           apply_packet_mask(vec, m1, use_kernel=True),
+           apply_packet_mask(vec, m1, use_kernel=False))
+
+    # tra_agg (all debias modes) -------------------------------------------
+    from repro.kernels.tra_agg.ops import DEBIAS_MODES, tra_aggregate
+    x = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    m = jnp.asarray((rng.random((C, P)) > 0.3).astype(np.float32))
+    w = jnp.asarray(rng.random(C).astype(np.float32) + 0.1)
+    suff = jnp.asarray((rng.random(C) > 0.5).astype(np.float32))
+    kept = m.mean(1)
+    for mode in DEBIAS_MODES:
+        kw = dict(mode=mode, kept_frac=kept,
+                  nominal_rate=jnp.full((C,), 0.3), sufficient=suff)
+        _check(f"tra_agg/{mode}",
+               tra_aggregate(x, m, w, use_kernel=True, **kw),
+               tra_aggregate(x, m, w, use_kernel=False, **kw))
+
+    # qfed_reweight ---------------------------------------------------------
+    from repro.kernels.qfed_reweight.ops import qfed_reweight
+    losses = jnp.asarray(rng.random(C).astype(np.float32) + 0.1)
+    dk, hk = qfed_reweight(x, losses, 1.5, 1.0, use_kernel=True)
+    dr, hr = qfed_reweight(x, losses, 1.5, 1.0, use_kernel=False)
+    _check("qfed_reweight/delta", dk, dr)
+    _check("qfed_reweight/h", hk, hr, rtol=1e-4)
+
+    # flash_decode ----------------------------------------------------------
+    from repro.kernels.flash_decode.ops import flash_decode
+    B, H, KV, dh, T = 2, 4, 2, 64, 128
+    q = jnp.asarray(rng.normal(size=(B, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, T, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, T, KV, dh)).astype(np.float32))
+    _check("flash_decode",
+           flash_decode(q, k, v, T - 1, t_blk=64, use_kernel=True),
+           flash_decode(q, k, v, T - 1, t_blk=64, use_kernel=False),
+           rtol=1e-4)
+
+    # uplink_fused megakernel (all modes, +-EF, ssq) ------------------------
+    from repro.kernels.uplink_fused.ops import uplink_round
+    xp = jnp.pad(x, ((0, 0), (0, P * F - D))).reshape(C, P, F)
+    ef = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    for mode in DEBIAS_MODES:
+        for ef_rows in (None, ef):
+            kw = dict(mode=mode, d_up=D, ef_rows=ef_rows, kept=kept,
+                      sufficient=suff, loss_rate=jnp.float32(0.3),
+                      want_ssq=True)
+            ak, ek, sk = uplink_round(xp, m, w, impl="kernel", **kw)
+            ar, er, sr = uplink_round(xp, m, w, impl="ref", **kw)
+            tag = f"uplink_fused/{mode}{'+ef' if ef_rows is not None else ''}"
+            _check(tag + "/agg", ak, ar)
+            _check(tag + "/ssq", sk, sr, rtol=1e-4)
+            if ef_rows is not None:
+                _check(tag + "/ef", ek, er, rtol=0, atol=0)
+
+    print(f"kernel parity smoke passed on backend={jax.default_backend()}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
