@@ -1,7 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # Headline JSONs land in benchmarks/results/: BENCH_sweep.json (grid
-# amortization) and BENCH_uplink_fused.json (megakernel HBM-pass
-# accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3).
+# amortization), BENCH_uplink_fused.json (megakernel HBM-pass
+# accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3)
+# and BENCH_netsim.json (on-device Gilbert-Elliott mask generation +
+# burst-grid scenarios/sec).
 import argparse
 import sys
 import time
@@ -20,12 +22,14 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (beyond, engine_bench, kernel_bench,
-                            paper_figures, roofline, sweep_bench)
+                            netsim_bench, paper_figures, roofline,
+                            sweep_bench)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
         benches += list(paper_figures.ALL) + list(beyond.ALL) \
-            + list(engine_bench.ALL) + list(sweep_bench.ALL)
+            + list(engine_bench.ALL) + list(sweep_bench.ALL) \
+            + list(netsim_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

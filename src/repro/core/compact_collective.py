@@ -26,7 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:                                  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:                   # jax 0.4.x (this repo's pin)
+    from jax.experimental.shard_map import shard_map
 
 PACKET_F = 256
 

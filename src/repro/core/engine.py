@@ -25,6 +25,18 @@ needs lives on device for the whole block:
                            ``kernels/uplink_fused`` (Pallas megakernel
                            on TPU, bit-identical jnp reference on
                            CPU/GPU),
+  * network simulation   — the stateful netsim layer (`repro/netsim`)
+                           rides the same scan: per-client
+                           Gilbert–Elliott channel states and AR(1)
+                           log-bandwidth levels are a ``NetSimState``
+                           carry inside ``EngineState``, advanced
+                           in-round (channel per packet via
+                           ``kernels/netsim_mask``, bandwidth per
+                           round) and consumed by the loss mask and
+                           the deadline delivery model. The
+                           ``channel="iid"`` default carries zero-size
+                           arrays and is bit-identical to the
+                           pre-netsim engine (tests/test_netsim.py),
   * logging              — per-round train loss and selected cohorts are
                            accumulated in scan outputs and flushed to
                            host once per block.
@@ -62,7 +74,12 @@ from repro.core import client_updates as cu
 from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
+from repro.kernels.netsim_mask import ops as netsim_ops
 from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.netsim.bandwidth import logbw_round_step
+from repro.netsim.channel import ge_transition_probs
+from repro.netsim.delivery import deadline_delivered, round_upload_seconds
+from repro.netsim.state import NetSimState, init_net_state
 from repro.network.packets import n_packets
 
 ENGINE_ALGOS = ("fedavg", "qfedavg", "pfedme", "perfedavg", "afl",
@@ -77,6 +94,8 @@ class EngineState(NamedTuple):
     c_global: jnp.ndarray  # (D,) SCAFFOLD server variate, or (0,)
     c_i: jnp.ndarray      # (N, D) SCAFFOLD client variates, or (0,)
     lam: jnp.ndarray      # (N,) AFL mixture weights (always allocated)
+    net: NetSimState      # channel states + log-bandwidth levels
+    #                       ((N,) each, or (0,) when netsim is off)
 
 
 class ScenarioCtx(NamedTuple):
@@ -85,14 +104,24 @@ class ScenarioCtx(NamedTuple):
     These are traced jit arguments (never closure constants); under the
     sweep engine every field gains a leading scenario axis and the step
     is vmapped over it. Anything NOT in here — algorithm, debias mode,
-    cohort size, local steps, batch size, TRA enabled, error feedback —
-    is baked into the step closure and must be identical across a sweep.
+    cohort size, local steps, batch size, TRA enabled, error feedback,
+    the netsim channel/bandwidth/deadline model *selection* — is baked
+    into the step closure and must be identical across a sweep.
     """
     base_key: jnp.ndarray    # (2,) uint32 PRNG root of the fold_in chain
-    loss_rate: jnp.ndarray   # ()   f32 TRA nominal drop rate
+    loss_rate: jnp.ndarray   # () f32 nominal drop rate, or (N,) f32
+    #                          per-client rates (tra.per_client_loss —
+    #                          the trace model's exponential fit)
     eligible: jnp.ndarray    # (N,) bool selection mask
     sufficient: jnp.ndarray  # (N,) f32 1-bit sufficiency reports
     data: DeviceDataset      # staged train set (train_x/train_y/counts)
+    # netsim scenario knobs (unused-but-traced when the corresponding
+    # model is off; XLA prunes them from the program)
+    burst_len: jnp.ndarray   # () f32 E[bad sojourn] in packets (GE)
+    good_loss: jnp.ndarray   # () f32 GOOD-state per-packet loss (GE)
+    bad_loss: jnp.ndarray    # () f32 BAD-state per-packet loss (GE)
+    bw_rho: jnp.ndarray      # () f32 AR(1) round-to-round correlation
+    deadline_s: jnp.ndarray  # () f32 per-round upload deadline
 
 
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -135,6 +164,8 @@ def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
 # everything else must agree across engines sharing a compiled step.
 SWEEP_VARYING_FIELDS = ("seed", "selection", "eligible_ratio")
 SWEEP_VARYING_TRA_FIELDS = ("loss_rate", "threshold_mbps")
+SWEEP_VARYING_NETSIM_FIELDS = ("burst_len", "good_loss", "bad_loss",
+                               "bw_rho", "deadline_s")
 
 
 def static_signature(cfg):
@@ -143,8 +174,11 @@ def static_signature(cfg):
     sweep) iff their signatures are equal."""
     tra = dataclasses.replace(
         cfg.tra, **{f: 0.0 for f in SWEEP_VARYING_TRA_FIELDS})
+    ns = dataclasses.replace(
+        cfg.netsim, **{f: 0.0 for f in SWEEP_VARYING_NETSIM_FIELDS})
     return dataclasses.replace(
-        cfg, tra=tra, seed=0, selection="all", eligible_ratio=1.0)
+        cfg, tra=tra, netsim=ns, seed=0, selection="all",
+        eligible_ratio=1.0)
 
 
 def _static_key(cfg):
@@ -159,7 +193,7 @@ def _static_key(cfg):
     stale cache entry."""
     return (dataclasses.astuple(dataclasses.replace(
         static_signature(cfg), n_rounds=0, eval_every=0, engine="scan")),
-        uplink_ops.resolved_impl())
+        uplink_ops.resolved_impl(), netsim_ops.resolved_impl())
 
 
 # step/jit cache shared across engine instances: scenario-varying values
@@ -183,17 +217,29 @@ def _cached_jits(cfg, cohort: int):
     return _STEP_CACHE[key]
 
 
-def init_engine_state(cfg, params, n_clients: int) -> EngineState:
+def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
+                      loss_rate=None, upload_mbps=None,
+                      netsim=None) -> EngineState:
     """Fresh engine state for one scenario (used by both the single
     engine and, stacked, by the sweep engine). ``params`` are copied:
     the engine jits DONATE the state, and the caller's arrays must not
-    be destroyed with it."""
+    be destroyed with it.
+
+    The netsim carry (Gilbert–Elliott channel states, log-bandwidth
+    levels) initialises from the scenario's PRNG root / loss rate /
+    static speed draw; the defaults reconstruct the single-engine
+    values from ``cfg`` so existing callers stay source-compatible.
+    """
     N = n_clients
     params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
     D = ravel_pytree(params)[0].shape[0]
     # SCAFFOLD uploads (dw ++ dc) ride one TRA stream, so its EF
     # memory covers the concatenated 2D vector.
     up_dim = 2 * D if cfg.algo == "scaffold" else D
+    if base_key is None:
+        base_key = jax.random.PRNGKey(cfg.seed)
+    if loss_rate is None:
+        loss_rate = jnp.float32(cfg.tra.loss_rate)
     return EngineState(
         params=params,
         ef_mem=jnp.zeros((N, up_dim), jnp.float32)
@@ -203,6 +249,9 @@ def init_engine_state(cfg, params, n_clients: int) -> EngineState:
         c_i=jnp.zeros((N, D), jnp.float32)
         if cfg.algo == "scaffold" else jnp.zeros((0,), jnp.float32),
         lam=jnp.ones((N,), jnp.float32) / N,
+        net=init_net_state(cfg.netsim if netsim is None else netsim, N,
+                           base_key=base_key, loss_rate=loss_rate,
+                           upload_mbps=upload_mbps),
     )
 
 
@@ -225,6 +274,18 @@ def make_round_step(cfg, cohort: int):
     F = tra_cfg.packet_floats
     debias = tra_cfg.debias
     local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+    # netsim model selection is static (program structure); its knobs
+    # (burst length, loss emissions, rho, deadline) are traced ctx
+    # fields and may vary per scenario.
+    ns = cfg.netsim
+    if ns.channel != "iid" and not tra_cfg.enabled:
+        raise ValueError(
+            f"netsim channel={ns.channel!r} models lossy TRA uploads "
+            f"and requires tra.enabled=True (with TRA off, uploads are "
+            f"reliable and the channel would be silently inert)")
+    use_ge = ns.channel == "gilbert_elliott"
+    use_bw = ns.bw_ar1
+    use_dl = ns.deadline
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -234,17 +295,23 @@ def make_round_step(cfg, cohort: int):
         old_vec, _ = ravel_pytree(params)
         # one threefry invocation covers the whole round: selection
         # gumbels, batch indices and the TRA packet draws (upload
-        # width is static at trace time, so P is known here)
+        # width is static at trace time, so P is known here). The GE
+        # channel needs a second (C, P) block — emission draws on top
+        # of the transition draws — appended so the iid slices (and
+        # hence the iid programs) are untouched.
         D_model = old_vec.shape[0]
         D_up = 2 * D_model if algo == "scaffold" else D_model
         P = n_packets(D_up, F)
         n_batch = C * steps * bs
+        n_tra = 2 * C * P if use_ge else C * P
         key = jax.random.fold_in(ctx.base_key, t)
-        u_all = jax.random.uniform(key, (N + n_batch + C * P,),
+        u_all = jax.random.uniform(key, (N + n_batch + n_tra,),
                                    minval=1e-12, maxval=1.0)
         u_sel = u_all[:N]
         u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
-        u_tra = u_all[N + n_batch:].reshape(C, P)
+        u_tra = u_all[N + n_batch:N + n_batch + C * P].reshape(C, P)
+        u_emit = u_all[N + n_batch + C * P:].reshape(C, P) \
+            if use_ge else None
 
         gumbel = -jnp.log(-jnp.log(u_sel))
         ids = jax.lax.top_k(jnp.where(ctx.eligible, gumbel, -jnp.inf),
@@ -287,12 +354,50 @@ def make_round_step(cfg, cohort: int):
         # TPU; the bit-identical jnp reference elsewhere).
         pad = P * F - D_up
         xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
-        if tra_cfg.enabled:
-            lost = (u_tra < ctx.loss_rate) \
+        # nominal drop rate: scalar (broadcast, the pre-netsim special
+        # case) or the per-client exponential trace fit gathered for
+        # the cohort (tra.per_client_loss)
+        lr_c = ctx.loss_rate if ctx.loss_rate.ndim == 0 \
+            else ctx.loss_rate[ids]
+        lr_col = lr_c if lr_c.ndim == 0 else lr_c[:, None]
+        net_channel, net_logbw = state.net.channel, state.net.logbw
+        if use_ge:
+            # bursty loss: advance each cohort client's two-state
+            # channel by P packet-steps (kernels/netsim_mask; Pallas
+            # on TPU, jnp scan reference elsewhere) and scatter the
+            # final states back into the carry. Sufficient clients
+            # retransmit — their mask is all-ones — but their channel
+            # still advances (the link fades either way).
+            p_gb, p_bg = ge_transition_probs(
+                lr_c, ctx.burst_len, ctx.good_loss, ctx.bad_loss)
+            ge_mask, s_fin = netsim_ops.ge_packet_mask(
+                u_tra, u_emit, net_channel[ids], p_gb, p_bg,
+                ctx.good_loss, ctx.bad_loss)
+            net_channel = net_channel.at[ids].set(s_fin)
+            pkt_mask = jnp.where(suff.astype(bool)[:, None], 1.0,
+                                 ge_mask)
+        elif tra_cfg.enabled:
+            lost = (u_tra < lr_col) \
                 & ~suff.astype(bool)[:, None]
             pkt_mask = 1.0 - lost.astype(jnp.float32)
         else:
             pkt_mask = jnp.ones((C, P))
+
+        if use_bw:
+            # time passes for every client, not just the cohort: one
+            # AR(1) step on all N log-bandwidth levels per round
+            net_logbw = logbw_round_step(key, net_logbw, ctx.bw_rho)
+        if use_dl:
+            # deadline delivery: convert current bandwidth + packets
+            # sent (retransmitters push ~P/(1-r), TRA one-shots push P)
+            # into a per-client made-it bit; a miss drops the WHOLE
+            # upload (row of zeros — EF captures it when enabled).
+            retransmit = suff.astype(bool) if tra_cfg.enabled \
+                else jnp.ones((C,), bool)
+            secs = round_upload_seconds(P, F, jnp.exp(net_logbw[ids]),
+                                        lr_c, retransmit)
+            pkt_mask = pkt_mask \
+                * deadline_delivered(secs, ctx.deadline_s)[:, None]
 
         kept = None
         if debias == "per_client_rate":
@@ -314,7 +419,7 @@ def make_round_step(cfg, cohort: int):
         agg, new_ef_rows, ssq = uplink_ops.uplink_round(
             xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
             ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
-            sufficient=suff, loss_rate=ctx.loss_rate, mult=mult,
+            sufficient=suff, loss_rate=lr_c, mult=mult,
             want_ssq=want_ssq)
         new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
             else state.ef_mem
@@ -359,7 +464,8 @@ def make_round_step(cfg, cohort: int):
             lam_new = lam / lam.sum()
 
         new_state = EngineState(new_params, new_ef, c_global_new,
-                                c_i_new, lam_new)
+                                c_i_new, lam_new,
+                                NetSimState(net_channel, net_logbw))
         return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
 
     return step
@@ -377,7 +483,9 @@ class RoundScanEngine:
 
     def __init__(self, cfg, data, sufficient: np.ndarray,
                  eligible: np.ndarray,
-                 device_data: Optional[DeviceDataset] = None):
+                 device_data: Optional[DeviceDataset] = None, *,
+                 upload_mbps: Optional[np.ndarray] = None,
+                 packet_loss: Optional[np.ndarray] = None):
         if cfg.algo not in ENGINE_ALGOS:
             raise ValueError(f"unsupported algo {cfg.algo!r}")
         self.cfg = cfg
@@ -391,18 +499,40 @@ class RoundScanEngine:
         self.eligible = jnp.asarray(np.asarray(eligible, bool))
         self.sufficient = jnp.asarray(
             np.asarray(sufficient, np.float32))
+        if cfg.tra.per_client_loss:
+            if packet_loss is None:
+                raise ValueError("tra.per_client_loss needs the trace "
+                                 "draw (pass nets.packet_loss)")
+            loss_rate = jnp.asarray(np.asarray(packet_loss, np.float32))
+        else:
+            loss_rate = jnp.float32(cfg.tra.loss_rate)
+        if (cfg.netsim.bw_ar1 or cfg.netsim.deadline) \
+                and upload_mbps is None:
+            raise ValueError("netsim bandwidth/deadline models need "
+                             "the trace draw (pass nets.upload_mbps)")
+        self._upload_mbps = None if upload_mbps is None \
+            else np.asarray(upload_mbps, np.float32)
+        ns = cfg.netsim
         self.ctx = ScenarioCtx(
             base_key=jax.random.PRNGKey(cfg.seed),
-            loss_rate=jnp.float32(cfg.tra.loss_rate),
+            loss_rate=loss_rate,
             eligible=self.eligible,
             sufficient=self.sufficient,
-            data=self.dd)
+            data=self.dd,
+            burst_len=jnp.float32(ns.burst_len),
+            good_loss=jnp.float32(ns.good_loss),
+            bad_loss=jnp.float32(ns.bad_loss),
+            bw_rho=jnp.float32(ns.bw_rho),
+            deadline_s=jnp.float32(ns.deadline_s))
         self._step, self._single, self._block = _cached_jits(
             cfg, self.cohort)
 
     # -- state --------------------------------------------------------------
     def init_state(self, params) -> EngineState:
-        return init_engine_state(self.cfg, params, self.n_clients)
+        return init_engine_state(self.cfg, params, self.n_clients,
+                                 base_key=self.ctx.base_key,
+                                 loss_rate=self.ctx.loss_rate,
+                                 upload_mbps=self._upload_mbps)
 
     # -- execution ----------------------------------------------------------
     def run_single(self, state: EngineState, t: int

@@ -33,6 +33,7 @@ from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
 from repro.core.sweep import SweepEngine
 from repro.core.tra import TRAConfig
+from repro.netsim.config import NetSimConfig
 from repro.data.synthetic import (FederatedDataset, padded_eval_set,
                                   sample_batches)
 from repro.network.trace import (ClientNetworks, eligible_by_ratio,
@@ -51,6 +52,10 @@ class FLConfig:
     selection: str = "all"            # all|ratio|threshold
     eligible_ratio: float = 1.0       # for selection="ratio"
     tra: TRAConfig = dataclasses.field(default_factory=TRAConfig)
+    # stateful network simulator (repro/netsim): Gilbert-Elliott bursty
+    # loss, AR(1) time-varying bandwidth, deadline delivery. The default
+    # (channel="iid", models off) is the pre-netsim engine bit-for-bit.
+    netsim: NetSimConfig = dataclasses.field(default_factory=NetSimConfig)
     # algorithm hyper-parameters (paper / source-code defaults)
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps
@@ -115,7 +120,9 @@ class FederatedServer:
             eligible_ratio=cfg.eligible_ratio,
             threshold_mbps=cfg.tra.threshold_mbps)
         self.engine = RoundScanEngine(cfg, data, self.sufficient,
-                                      np.asarray(elig))
+                                      np.asarray(elig),
+                                      upload_mbps=self.nets.upload_mbps,
+                                      packet_loss=self.nets.packet_loss)
         self._state = self.engine.init_state(
             mlp_init(jax.random.PRNGKey(cfg.seed)))
         self._eval_fn = jax.jit(jax.vmap(mlp_accuracy, in_axes=(None, 0, 0, 0)))

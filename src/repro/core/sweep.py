@@ -47,11 +47,13 @@ import numpy as np
 
 from repro.core import tra as tra_mod
 from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
+                               SWEEP_VARYING_NETSIM_FIELDS,
                                SWEEP_VARYING_TRA_FIELDS, EngineState,
                                ScenarioCtx, _static_key,
                                init_engine_state, make_round_step,
                                static_signature)
 from repro.core.mlp import mlp_init
+from repro.netsim.config import NetSimConfig
 from repro.data.synthetic import (DeviceDataset, FederatedDataset,
                                   stage_on_device,
                                   stage_scenarios_on_device)
@@ -72,6 +74,14 @@ class Scenario:
     sufficient: np.ndarray        # (N,) 0/1 sufficiency reports
     eligible: np.ndarray          # (N,) bool selection mask
     data: FederatedDataset        # this scenario's dataset draw
+    # netsim scenario axis: this cell's channel/bandwidth/deadline
+    # knobs (None -> the sweep config's cfg.netsim; static model flags
+    # must agree across a sweep, traced knobs may vary per cell)
+    netsim: Optional[NetSimConfig] = None
+    # per-client trace draws, needed when tra.per_client_loss or a
+    # netsim bandwidth/deadline model is on
+    packet_loss: Optional[np.ndarray] = None   # (N,) drop rates
+    upload_mbps: Optional[np.ndarray] = None   # (N,) speeds
 
 
 def scenario_from_config(cfg, data: FederatedDataset,
@@ -89,7 +99,10 @@ def scenario_from_config(cfg, data: FederatedDataset,
         eligible_ratio=cfg.eligible_ratio,
         threshold_mbps=cfg.tra.threshold_mbps))
     return Scenario(seed=cfg.seed, loss_rate=cfg.tra.loss_rate,
-                    sufficient=sufficient, eligible=eligible, data=data)
+                    sufficient=sufficient, eligible=eligible, data=data,
+                    netsim=cfg.netsim,
+                    packet_loss=nets.packet_loss,
+                    upload_mbps=nets.upload_mbps)
 
 
 class SweepEngine:
@@ -135,23 +148,61 @@ class SweepEngine:
             raise ValueError(f"scenarios disagree on cohort size: "
                              f"{sorted(cohorts)}")
         self.cohort = cohorts.pop()
+        # per-scenario netsim knobs (static model flags must agree —
+        # they pick the compiled program)
+        nsims = self._nsims = [
+            s.netsim if s.netsim is not None else cfg.netsim
+            for s in self.scenarios]
+        for i, ns in enumerate(nsims):
+            if (ns.channel, ns.bw_ar1, ns.deadline) != \
+                    (cfg.netsim.channel, cfg.netsim.bw_ar1,
+                     cfg.netsim.deadline):
+                raise ValueError(
+                    f"scenario {i} selects different netsim models "
+                    f"than the sweep config; only "
+                    f"{SWEEP_VARYING_NETSIM_FIELDS} may vary per cell")
+        if cfg.tra.per_client_loss:
+            if any(s.packet_loss is None for s in self.scenarios):
+                raise ValueError("tra.per_client_loss needs per-client "
+                                 "rates on every Scenario (packet_loss)")
+            loss_rate = jnp.asarray(np.stack(
+                [np.asarray(s.packet_loss, np.float32)
+                 for s in self.scenarios]))
+        else:
+            loss_rate = jnp.asarray(
+                [s.loss_rate for s in self.scenarios], jnp.float32)
+        if (cfg.netsim.bw_ar1 or cfg.netsim.deadline) \
+                and any(s.upload_mbps is None for s in self.scenarios):
+            raise ValueError("netsim bandwidth/deadline models need "
+                             "per-client speeds on every Scenario "
+                             "(upload_mbps)")
         self.ctx = ScenarioCtx(
             base_key=jnp.stack([jax.random.PRNGKey(s.seed)
                                 for s in self.scenarios]),
-            loss_rate=jnp.asarray([s.loss_rate for s in self.scenarios],
-                                  jnp.float32),
+            loss_rate=loss_rate,
             eligible=jnp.asarray(np.stack(
                 [np.asarray(s.eligible, bool) for s in self.scenarios])),
             sufficient=jnp.asarray(np.stack(
                 [np.asarray(s.sufficient, np.float32)
                  for s in self.scenarios])),
-            data=self.dd)
+            data=self.dd,
+            burst_len=jnp.asarray([ns.burst_len for ns in nsims],
+                                  jnp.float32),
+            good_loss=jnp.asarray([ns.good_loss for ns in nsims],
+                                  jnp.float32),
+            bad_loss=jnp.asarray([ns.bad_loss for ns in nsims],
+                                 jnp.float32),
+            bw_rho=jnp.asarray([ns.bw_rho for ns in nsims], jnp.float32),
+            deadline_s=jnp.asarray([ns.deadline_s for ns in nsims],
+                                   jnp.float32))
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
         if cache_key not in _SWEEP_CACHE:
             step = make_round_step(cfg, self.cohort)
             ctx_axes = ScenarioCtx(base_key=0, loss_rate=0, eligible=0,
                                    sufficient=0,
-                                   data=0 if self.data_batched else None)
+                                   data=0 if self.data_batched else None,
+                                   burst_len=0, good_loss=0, bad_loss=0,
+                                   bw_rho=0, deadline_s=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
             _SWEEP_CACHE[cache_key] = (step, jax.jit(
                 lambda ctx, state, ts: jax.lax.scan(
@@ -178,8 +229,10 @@ class SweepEngine:
             if static_signature(c) != sig0:
                 raise ValueError(
                     f"config {i} differs from config 0 in a static "
-                    f"field; only {SWEEP_VARYING_FIELDS} and tra."
-                    f"{SWEEP_VARYING_TRA_FIELDS} may vary in one sweep")
+                    f"field; only {SWEEP_VARYING_FIELDS}, tra."
+                    f"{SWEEP_VARYING_TRA_FIELDS} and netsim."
+                    f"{SWEEP_VARYING_NETSIM_FIELDS} may vary in one "
+                    f"sweep")
         if isinstance(datas, FederatedDataset):
             datas = [datas] * S
         if len(datas) != S:
@@ -201,7 +254,10 @@ class SweepEngine:
         scen = [Scenario(seed=c.seed, loss_rate=c.tra.loss_rate,
                          sufficient=tra_mod.sufficiency_report(
                              n, c.tra.threshold_mbps),
-                         eligible=eligible[i], data=d)
+                         eligible=eligible[i], data=d,
+                         netsim=c.netsim,
+                         packet_loss=n.packet_loss,
+                         upload_mbps=n.upload_mbps)
                 for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]
         return cls(cfgs[0], scen)
 
@@ -215,8 +271,12 @@ class SweepEngine:
         init = mlp_init if param_init is None else param_init
         states = [init_engine_state(self.cfg,
                                     init(jax.random.PRNGKey(s.seed)),
-                                    self.n_clients)
-                  for s in self.scenarios]
+                                    self.n_clients,
+                                    base_key=jax.random.PRNGKey(s.seed),
+                                    loss_rate=self.ctx.loss_rate[i],
+                                    upload_mbps=s.upload_mbps,
+                                    netsim=self._nsims[i])
+                  for i, s in enumerate(self.scenarios)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
     # -- execution ----------------------------------------------------------

@@ -32,6 +32,13 @@ class TRAConfig:
     debias: str = "group_rate"        # paper-faithful Eq.(1) default
     packet_floats: int = PACKET_FLOATS
     threshold_mbps: float = DEFAULT_THRESHOLD_MBPS
+    # use each client's OWN drop rate from the trace model's per-client
+    # exponential fit (``ClientNetworks.packet_loss``) instead of the
+    # single scalar above — the engine's ``ScenarioCtx.loss_rate``
+    # becomes (N,) and both the loss mask and the group_rate debias use
+    # the per-client rates. Static (changes the compiled program); the
+    # scalar default is the bit-identical broadcast special case.
+    per_client_loss: bool = False
 
     def __post_init__(self):
         assert self.debias in DEBIAS_MODES, self.debias

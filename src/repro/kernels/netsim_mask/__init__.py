@@ -1,0 +1,1 @@
+"""On-device Gilbert–Elliott packet-mask generation (netsim layer)."""

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the netsim_mask kernel: the Gilbert–Elliott
+per-packet recurrence as a ``lax.scan`` over the packet axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ge_mask_ref(u_t, u_e, s0, p_gb, p_bg, h_g, h_b):
+    """u_t, u_e: (C, P) uniforms (transition / emission draws);
+    s0: (C,) int32 states (0=GOOD, 1=BAD); p_gb, p_bg, h_g, h_b: (C,).
+
+    Per packet: transition FIRST (flip with prob p_gb from GOOD /
+    p_bg from BAD), then emit loss with the new state's rate — so a
+    stationary ``s0`` draw keeps the chain stationary from packet 0.
+    Returns (mask (C, P) f32 with 1 = delivered, s_final (C,) int32).
+    """
+    def step(s, us):
+        ut, ue = us                                     # (C,), (C,)
+        flip = jnp.where(s == 1, p_bg, p_gb)
+        s = jnp.where(ut < flip, 1 - s, s)
+        h = jnp.where(s == 1, h_b, h_g)
+        delivered = (ue >= h).astype(jnp.float32)
+        return s, delivered
+
+    s_fin, mask = jax.lax.scan(step, s0, (u_t.T, u_e.T))
+    return mask.T, s_fin

@@ -1,0 +1,20 @@
+"""Stateful network simulator: bursty Gilbert–Elliott loss, AR(1)
+time-varying bandwidth and deadline-based delivery as first-class,
+sweepable scenario axes (see docs/ARCHITECTURE.md §netsim)."""
+from repro.netsim.bandwidth import (BW_FOLD, init_logbw,
+                                    logbw_round_step)
+from repro.netsim.channel import (CH_INIT_FOLD, ge_transition_probs,
+                                  init_channel_state,
+                                  sample_ge_mask_numpy,
+                                  stationary_bad_frac)
+from repro.netsim.config import CHANNELS, NetSimConfig
+from repro.netsim.delivery import deadline_delivered, round_upload_seconds
+from repro.netsim.state import NetSimState, init_net_state
+
+__all__ = [
+    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "NetSimConfig", "NetSimState",
+    "deadline_delivered", "ge_transition_probs", "init_channel_state",
+    "init_logbw", "init_net_state", "logbw_round_step",
+    "round_upload_seconds", "sample_ge_mask_numpy",
+    "stationary_bad_frac",
+]

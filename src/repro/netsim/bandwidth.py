@@ -1,0 +1,45 @@
+"""Time-varying per-client bandwidth: an AR(1) walk in log-speed space.
+
+Mobile upload speed drifts round to round (handovers, congestion, signal
+fade) but its population marginal is well described by the FCC lognormal
+fit in `network/trace.py`. The netsim bandwidth model keeps BOTH facts:
+each client carries a log-Mbps level l_t in ``NetSimState.logbw``,
+initialised from the client's ``sample_networks`` speed draw (a
+stationary sample) and advanced once per round by
+
+    l_t = mu + rho (l_{t-1} - mu) + sigma sqrt(1 - rho^2) eps_t
+
+(`trace.ar1_logspeed_step`, which owns mu = SPEED_MU and
+sigma = SPEED_SIGMA so the calibration constants stay single-sourced).
+Because the innovation variance is shrunk by (1 - rho^2), N(mu, sigma^2)
+is the exact stationary law — exp(l_t) satisfies the paper's two FCC
+speed quantiles at every round, for every rho. rho is a traced
+scenario knob (``ScenarioCtx.bw_rho``): rho=0 redraws speeds i.i.d.
+each round, rho→1 freezes them at the static trace draw.
+
+The walk advances ALL N clients every round (time passes for everyone,
+not just the cohort); only the deadline delivery model reads it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.network.trace import ar1_logspeed_step
+
+# fold_in tag for the per-round bandwidth innovation draw (applied to
+# the already-folded round key, so each round gets a fresh stream that
+# never collides with the selection/batch/packet uniforms).
+BW_FOLD = 0x42574550  # "BWEP"
+
+
+def init_logbw(upload_mbps) -> jnp.ndarray:
+    """(N,) f32 initial log-levels from a static trace draw."""
+    return jnp.log(jnp.asarray(upload_mbps, jnp.float32))
+
+
+def logbw_round_step(round_key, logbw, rho) -> jnp.ndarray:
+    """Advance every client's log-bandwidth by one round."""
+    eps = jax.random.normal(jax.random.fold_in(round_key, BW_FOLD),
+                            logbw.shape)
+    return ar1_logspeed_step(logbw, rho, eps)

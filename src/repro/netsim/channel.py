@@ -1,0 +1,101 @@
+"""Gilbert–Elliott two-state Markov loss channel.
+
+Real wireless loss is bursty and time-correlated: packets drop in runs
+while the link is faded, not as independent coin flips. The classic
+Gilbert–Elliott model captures this with a per-client hidden state
+s ∈ {GOOD=0, BAD=1}, per-packet transition probabilities and per-state
+loss (emission) probabilities:
+
+    GOOD --p_gb--> BAD        loss | GOOD ~ Bernoulli(h_g)
+    BAD  --p_bg--> GOOD       loss | BAD  ~ Bernoulli(h_b)
+
+Parameterisation used here (``ge_transition_probs``): the user-facing
+knobs are the *stationary* loss rate r (the same ``loss_rate`` the
+i.i.d. channel uses, so "10% loss" means the same thing in both modes)
+and the expected BAD-sojourn length L in packets:
+
+    pi_b = (r - h_g) / (h_b - h_g)     stationary BAD fraction
+    p_bg = 1 / L                       E[BAD sojourn] = L packets
+    p_gb = p_bg * pi_b / (1 - pi_b)    detailed balance
+
+With the default h_g=0, h_b=1 this degenerates to the pure on/off
+Gilbert channel: pi_b = r and lost packets arrive in runs of mean
+length L. The per-packet recurrence is *transition first, then emit*,
+so a chain started from the stationary state distribution
+(``init_channel_state``) is stationary from packet 0 — the property
+test in tests/test_netsim.py checks the empirical loss fraction
+converges to r for several (r, L) cells.
+
+The device recurrence itself lives in ``kernels/netsim_mask`` (Pallas
+kernel + jnp ref); this module owns the parameter math, the stationary
+init and a host-side numpy sampler used as the benchmark baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import RATE_EPS
+
+# fold_in tag for the stationary channel-state init draw; any constant
+# far outside the round-index range works (rounds are < 2**20), it just
+# must never collide with a ``fold_in(base_key, t)`` round key.
+CH_INIT_FOLD = 0x4E455453  # "NETS"
+
+
+def stationary_bad_frac(loss_rate, good_loss, bad_loss):
+    """pi_b such that pi_g*h_g + pi_b*h_b == loss_rate (clipped to a
+    proper probability; loss_rate outside [h_g, h_b] saturates)."""
+    pi_b = (loss_rate - good_loss) \
+        / jnp.maximum(bad_loss - good_loss, RATE_EPS)
+    return jnp.clip(pi_b, 0.0, 1.0 - RATE_EPS)
+
+
+def ge_transition_probs(loss_rate, burst_len, good_loss, bad_loss):
+    """(p_gb, p_bg) hitting the target stationary rate and burst length.
+
+    All arguments may be traced scalars or (C,) per-client arrays
+    (broadcasting applies) — under the sweep engine they arrive with a
+    scenario axis vmapped away.
+    """
+    pi_b = stationary_bad_frac(loss_rate, good_loss, bad_loss)
+    p_bg = 1.0 / jnp.maximum(burst_len, 1.0)
+    p_gb = jnp.clip(p_bg * pi_b / jnp.maximum(1.0 - pi_b, RATE_EPS),
+                    0.0, 1.0)
+    return p_gb, p_bg
+
+
+def init_channel_state(base_key, n_clients: int, loss_rate, good_loss,
+                       bad_loss) -> jnp.ndarray:
+    """(N,) int32 stationary draw of per-client channel states.
+
+    Keyed off ``fold_in(base_key, CH_INIT_FOLD)`` so the single engine
+    and the sweep engine (same per-scenario base key) initialise
+    bit-identically, and no round key is reused."""
+    pi_b = stationary_bad_frac(loss_rate, good_loss, bad_loss)
+    u = jax.random.uniform(jax.random.fold_in(base_key, CH_INIT_FOLD),
+                           (n_clients,))
+    return (u < pi_b).astype(jnp.int32)
+
+
+def sample_ge_mask_numpy(rng: np.random.Generator, n_clients: int,
+                         n_pkts: int, loss_rate: float, burst_len: float,
+                         good_loss: float = 0.0, bad_loss: float = 1.0
+                         ) -> np.ndarray:
+    """Host-side reference sampler (the loop a non-device simulator
+    would run): (C, P) delivery mask, 1 = delivered. Benchmark baseline
+    for the on-device kernel — NOT the parity oracle (that is
+    ``kernels/netsim_mask/ref.py``, which shares the engine's PRNG)."""
+    pi_b = np.clip((loss_rate - good_loss)
+                   / max(bad_loss - good_loss, RATE_EPS), 0.0, 1.0)
+    p_bg = 1.0 / max(burst_len, 1.0)
+    p_gb = min(p_bg * pi_b / max(1.0 - pi_b, RATE_EPS), 1.0)
+    mask = np.ones((n_clients, n_pkts), np.float32)
+    s = (rng.random(n_clients) < pi_b).astype(np.int32)
+    for p in range(n_pkts):
+        flip = rng.random(n_clients) < np.where(s == 1, p_bg, p_gb)
+        s = np.where(flip, 1 - s, s)
+        h = np.where(s == 1, bad_loss, good_loss)
+        mask[:, p] = (rng.random(n_clients) >= h).astype(np.float32)
+    return mask

@@ -1,0 +1,48 @@
+"""Static configuration of the stateful network simulator.
+
+``NetSimConfig`` rides inside ``FLConfig`` (``cfg.netsim``) next to
+``TRAConfig``. Its fields split exactly the way the engine splits all
+knobs:
+
+  * **static** (change the compiled program): ``channel`` selects the
+    loss process (i.i.d. Bernoulli vs Gilbert–Elliott), ``bw_ar1``
+    switches the per-round AR(1) bandwidth walk on, ``deadline``
+    switches the deadline delivery model on. These must be shared
+    across a sweep.
+  * **traced** (scenario-varying, ride ``ScenarioCtx``): ``burst_len``,
+    ``good_loss``, ``bad_loss``, ``bw_rho``, ``deadline_s``. A sweep
+    may grid over them without recompiling — that is what turns "packet
+    loss below a certain fraction" into a burst-length x loss-rate
+    scenario family (see ``SWEEP_VARYING_NETSIM_FIELDS`` in
+    core/engine.py).
+
+The default (``channel="iid"``, both models off) is the pre-netsim
+engine, bit-for-bit (locked by tests/test_netsim.py). A non-iid
+channel models *lossy TRA uploads*, so it requires ``tra.enabled``
+(the engine raises otherwise — with TRA off, uploads are reliable and
+a channel would be silently inert); the bandwidth walk and deadline
+model compose with either setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+CHANNELS = ("iid", "gilbert_elliott")
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSimConfig:
+    # -- loss channel -------------------------------------------------------
+    channel: str = "iid"        # "iid" | "gilbert_elliott"
+    burst_len: float = 8.0      # E[bad-state sojourn] in packets (1/p_bg)
+    good_loss: float = 0.0      # per-packet loss prob in the GOOD state
+    bad_loss: float = 1.0       # per-packet loss prob in the BAD state
+    # -- time-varying bandwidth --------------------------------------------
+    bw_ar1: bool = False        # AR(1) walk on per-client log upload speed
+    bw_rho: float = 0.9         # round-to-round correlation of the walk
+    # -- deadline / straggler delivery -------------------------------------
+    deadline: bool = False      # drop whole uploads that miss the deadline
+    deadline_s: float = 60.0    # per-round upload deadline (seconds)
+
+    def __post_init__(self):
+        assert self.channel in CHANNELS, self.channel

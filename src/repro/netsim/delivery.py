@@ -1,0 +1,48 @@
+"""Deadline-based delivery: bandwidth + packets-sent -> round outcome.
+
+The paper's motivation for TRA is wall-clock: a retransmitting client
+must push ~P/(1-r) packets through its uplink before the server's
+round deadline, a TRA client pushes exactly P. This module converts a
+cohort's current bandwidth (from ``NetSimState.logbw``) and its
+transmission policy into a per-client delivered/missed bit for the
+round:
+
+    secs_c = P * packet_bytes * 8 * sends_c / (mbps_c * 1e6)
+    sends_c = 1/(1 - r_c)  if client c retransmits (sufficient, or
+                           TRA disabled — the reliable-upload baseline)
+            = 1            if client c throws right away
+    delivered_c = secs_c <= deadline_s
+
+A missed deadline drops the WHOLE upload (the packet mask row goes to
+zero): the straggler simply isn't there when the server aggregates.
+Error feedback, when enabled, then captures the entire update in the
+client's EF memory — no special casing needed. Note the aggregation
+weights still enter the denominator, so stragglers bias the round
+exactly the way real federated deadlines do; that interaction is the
+point of making the deadline a scenario axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import RATE_EPS
+
+PACKET_BYTES_PER_FLOAT = 4  # f32 payload coordinates
+
+
+def round_upload_seconds(n_pkts: int, packet_floats: int, mbps,
+                         loss_rate, retransmit):
+    """Per-client seconds to complete this round's upload.
+
+    mbps / loss_rate / retransmit are (C,) (loss_rate may be a scalar);
+    the retransmit inflation is the geometric expectation 1/(1-r)."""
+    bits = float(n_pkts * packet_floats * PACKET_BYTES_PER_FLOAT * 8)
+    sends = jnp.where(retransmit,
+                      1.0 / jnp.maximum(1.0 - loss_rate, RATE_EPS),
+                      1.0)
+    return bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
+
+
+def deadline_delivered(secs, deadline_s):
+    """(C,) f32 1 = made the deadline, 0 = whole upload dropped."""
+    return (secs <= deadline_s).astype(jnp.float32)

@@ -1,0 +1,53 @@
+"""Device-resident simulator state, carried through the engine's scan.
+
+``NetSimState`` rides inside ``EngineState`` (field ``net``) next to
+the EF/SCAFFOLD/AFL carries, so channel states and bandwidth levels
+persist across rounds AND across block boundaries by the same
+mechanism — and gain a leading scenario axis for free under the sweep
+engine's tree-stacked states. Fields are zero-size arrays whenever the
+corresponding model is off (the ``channel="iid"`` default carries two
+(0,) arrays through an otherwise bit-identical program).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.netsim.bandwidth import init_logbw
+from repro.netsim.channel import init_channel_state
+from repro.netsim.config import NetSimConfig
+
+
+class NetSimState(NamedTuple):
+    channel: jnp.ndarray  # (N,) int32 GE states (0=GOOD, 1=BAD), or (0,)
+    logbw: jnp.ndarray    # (N,) f32 log upload Mbps levels, or (0,)
+
+
+def init_net_state(ns: NetSimConfig, n_clients: int, *, base_key=None,
+                   loss_rate=None, upload_mbps=None) -> NetSimState:
+    """Fresh per-scenario simulator state.
+
+    ``base_key`` is the scenario's PRNG root (the channel init draws
+    off a distinguished fold of it); ``loss_rate`` is the scenario's
+    traced scalar or per-client (N,) rate; ``upload_mbps`` the static
+    trace draw seeding the bandwidth walk. Both engines (single and
+    sweep) call this with identical per-scenario values, which is what
+    makes their netsim runs bit-identical.
+    """
+    channel = jnp.zeros((0,), jnp.int32)
+    logbw = jnp.zeros((0,), jnp.float32)
+    if ns.channel == "gilbert_elliott":
+        if base_key is None:
+            raise ValueError("gilbert_elliott channel needs base_key")
+        lr = jnp.asarray(loss_rate, jnp.float32)
+        channel = init_channel_state(base_key, n_clients, lr,
+                                     ns.good_loss, ns.bad_loss)
+    if ns.bw_ar1 or ns.deadline:
+        if upload_mbps is None:
+            raise ValueError(
+                "netsim bandwidth/deadline models need the per-client "
+                "upload speeds (pass nets.upload_mbps through the "
+                "engine)")
+        logbw = init_logbw(upload_mbps)
+    return NetSimState(channel=channel, logbw=logbw)

@@ -120,6 +120,25 @@ def stage_network_scenarios(nets_list, selections, *,
     return jnp.stack(rows)
 
 
+def ar1_logspeed_step(logbw, rho, eps, mu: float = SPEED_MU,
+                      sigma: float = SPEED_SIGMA):
+    """One round of the stationarity-preserving AR(1) on log upload speed.
+
+    ``logbw`` (N,) are per-client log-Mbps levels, ``eps`` (N,) standard
+    normals, ``rho`` the round-to-round correlation (traced scalar under
+    the netsim sweep axis). The innovation is scaled by
+    ``sigma * sqrt(1 - rho^2)``, so the stationary distribution is
+    exactly N(mu, sigma^2) — i.e. exp(logbw) keeps the FCC lognormal
+    calibration above (P(X<2)=0.24, P(X<8)=0.49) for every rho. The
+    netsim layer (`repro/netsim/bandwidth.py`) initialises ``logbw``
+    from a ``sample_networks`` draw (a stationary sample), so the
+    per-round marginals match the static trace model at all t.
+    """
+    import jax.numpy as jnp
+    innov = sigma * jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0))
+    return mu + rho * (logbw - mu) + innov * eps
+
+
 def upload_seconds(n_bytes: float, mbps: float, loss: float,
                    retransmit: bool) -> float:
     """Analytic upload-time model (motivates TRA; used by benchmarks only).

@@ -1,0 +1,157 @@
+"""Frozen copy of the PRE-netsim round step (engine.py as of PR 3).
+
+This is the bit-identity oracle for the ``channel="iid"`` default: the
+netsim PR threads new state and scenario fields through the engine, and
+tests/test_netsim.py asserts that with netsim disabled the refactored
+step still computes EXACTLY this math, bitwise, for every algorithm
+combination. Deliberately verbatim (only ``EngineState(...)``
+construction swapped for ``state._replace(...)`` so the frozen step
+tolerates fields added to the carry later) — do not "clean up" or
+share code with the live engine; divergence is the point of the lock.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import client_updates as cu
+from repro.core.mlp import mlp_weighted_loss
+from repro.core.tra import flatten_clients, unflatten_like
+from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.network.packets import n_packets
+
+
+def make_legacy_round_step(cfg, cohort: int):
+    """The pre-netsim ``step(ctx, state, t)``: scalar ``ctx.loss_rate``
+    applied to every client, i.i.d. Bernoulli packet loss, no channel or
+    bandwidth state."""
+    tra_cfg = cfg.tra
+    hyper = cfg.hyper()
+    algo = cfg.algo
+    ef = cfg.error_feedback
+    C = cohort
+    steps, bs = cfg.local_steps, cfg.batch_size
+    F = tra_cfg.packet_floats
+    debias = tra_cfg.debias
+    local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+
+    def step(ctx, state, t):
+        dd = ctx.data
+        N = dd.counts.shape[0]
+        afl_len = min(64, dd.train_x.shape[1])
+        params = state.params
+        old_vec, _ = ravel_pytree(params)
+        D_model = old_vec.shape[0]
+        D_up = 2 * D_model if algo == "scaffold" else D_model
+        P = n_packets(D_up, F)
+        n_batch = C * steps * bs
+        key = jax.random.fold_in(ctx.base_key, t)
+        u_all = jax.random.uniform(key, (N + n_batch + C * P,),
+                                   minval=1e-12, maxval=1.0)
+        u_sel = u_all[:N]
+        u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
+        u_tra = u_all[N + n_batch:].reshape(C, P)
+
+        gumbel = -jnp.log(-jnp.log(u_sel))
+        ids = jax.lax.top_k(jnp.where(ctx.eligible, gumbel, -jnp.inf),
+                            C)[1]
+        counts = dd.counts[ids]                              # (C,)
+        idx = jnp.minimum((u_idx * counts[:, None, None]
+                           ).astype(jnp.int32), counts[:, None, None] - 1)
+        cid = ids[:, None, None]
+        X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
+        Y = dd.train_y[cid, idx]                 # (C, steps, bs)
+        w = counts.astype(jnp.float32)
+        weights = w / w.sum()
+        suff = ctx.sufficient[ids]
+
+        if algo == "scaffold":
+            c_global = unflatten_like(state.c_global, params)
+
+            def loc(p, x, y, ci_vec):
+                ci = unflatten_like(ci_vec, params)
+                return cu.scaffold_local(p, x, y, c_global, ci, hyper)
+
+            uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                params, X, Y, state.c_i[ids])
+            dw = flatten_clients(uploads["dw"], C)
+            dc = flatten_clients(uploads["dc"], C)
+            flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
+        else:
+            uploads, aux = jax.vmap(
+                lambda p, x, y: local(p, x, y, hyper),
+                in_axes=(None, 0, 0))(params, X, Y)
+            flat = flatten_clients(uploads, C)               # (C, D)
+
+        pad = P * F - D_up
+        xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
+        if tra_cfg.enabled:
+            lost = (u_tra < ctx.loss_rate) \
+                & ~suff.astype(bool)[:, None]
+            pkt_mask = 1.0 - lost.astype(jnp.float32)
+        else:
+            pkt_mask = jnp.ones((C, P))
+
+        kept = None
+        if debias == "per_client_rate":
+            pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
+            kept = (pkt_mask @ pcnt) / D_up
+
+        if algo == "qfedavg":
+            eps = 1e-10
+            fq = jnp.power(aux["loss0"] + eps, cfg.q)
+            w_agg, mult, want_ssq = jnp.ones(C), fq, True
+        elif algo == "afl":
+            w_agg, mult, want_ssq = state.lam[ids], None, False
+        else:
+            w_agg, mult, want_ssq = weights, None, False
+
+        agg, new_ef_rows, ssq = uplink_ops.uplink_round(
+            xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
+            ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
+            sufficient=suff, loss_rate=ctx.loss_rate, mult=mult,
+            want_ssq=want_ssq)
+        new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
+            else state.ef_mem
+
+        c_global_new, c_i_new, lam_new = \
+            state.c_global, state.c_i, state.lam
+        if algo == "scaffold":
+            D = dw.shape[1]
+            dw_agg, dc_agg = agg[:D], agg[D:]
+            new_vec = old_vec + dw_agg
+            c_global_new = state.c_global + (C / N) * dc_agg
+            c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
+        elif algo == "qfedavg":
+            h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
+                * ssq + cfg.lipschitz * fq
+            agg_sum = agg * C
+            new_vec = old_vec - agg_sum / jnp.maximum(h.sum(), 1e-8)
+        elif algo == "afl":
+            new_vec = agg
+        elif algo == "pfedme":
+            new_vec = (1 - cfg.pfedme_beta) * old_vec \
+                + cfg.pfedme_beta * agg
+        else:  # fedavg / perfedavg
+            new_vec = agg
+        new_params = unflatten_like(new_vec, params)
+
+        if algo == "afl":
+            Xe = dd.train_x[ids, :afl_len]
+            Ye = dd.train_y[ids, :afl_len]
+            msk = (jnp.arange(afl_len)[None, :]
+                   < counts[:, None]).astype(jnp.float32)
+            losses = jax.vmap(mlp_weighted_loss,
+                              in_axes=(None, 0, 0, 0))(
+                new_params, Xe, Ye, msk)
+            lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
+            lam = jnp.maximum(lam, 0.0)
+            lam_new = lam / lam.sum()
+
+        new_state = state._replace(
+            params=new_params, ef_mem=new_ef, c_global=c_global_new,
+            c_i=c_i_new, lam=lam_new)
+        return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
+
+    return step

@@ -1,0 +1,379 @@
+"""Stateful network simulator (repro/netsim + kernels/netsim_mask).
+
+* ``channel="iid"`` default is BIT-IDENTICAL to the pre-netsim engine:
+  the refactored step is checked against a frozen copy of the PR-3
+  round step (tests/_legacy_engine.py) for fedavg/scaffold/qfedavg,
+  +-TRA, +-error feedback.
+* Gilbert–Elliott stationary loss fraction converges to the configured
+  rate (so "10% loss" means the same thing in both channel modes), and
+  the mean loss-burst length tracks ``burst_len``.
+* Channel / bandwidth state persists across scan rounds and across
+  block boundaries (block-partition invariance with netsim on).
+* An S-scenario heterogeneous-channel sweep (different loss rates AND
+  burst lengths per cell) is bitwise identical to S independent runs.
+* netsim_mask kernel (interpret) == jnp reference, including under
+  vmap (the sweep engine's scenario axis).
+* Per-client loss rates: the scalar rate is a bit-identical broadcast
+  special case; heterogeneous per-client rates are actually applied.
+* Deadline delivery: an infinite deadline is a bitwise no-op; a tiny
+  one drops every upload.
+* The AR(1) log-bandwidth walk preserves the FCC lognormal calibration.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core.mlp import mlp_init
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.sweep import SweepEngine
+from repro.core.tra import TRAConfig
+from repro.data.synthetic import generate_synthetic
+from repro.kernels.netsim_mask.ops import ge_packet_mask
+from repro.netsim import (NetSimConfig, ge_transition_probs,
+                          stationary_bad_frac)
+from repro.network.trace import (SPEED_MU, SPEED_SIGMA, ClientNetworks,
+                                 ar1_logspeed_step)
+from tests._legacy_engine import make_legacy_round_step
+
+N_CLIENTS = 20
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_synthetic(np.random.default_rng(0),
+                              n_clients=N_CLIENTS, alpha=0.5, beta=0.5)
+
+
+@pytest.fixture(scope="module")
+def nets():
+    return ClientNetworks(np.linspace(0.5, 20.0, N_CLIENTS),
+                          np.full(N_CLIENTS, 0.05))
+
+
+def _cfg(seed=0, loss_rate=0.2, algo="fedavg", tra_on=True, ef=False,
+         netsim=None, tra_kw=None, **kw):
+    kw.setdefault("eval_every", 100)
+    tra_kw = tra_kw or {}
+    return FLConfig(algo=algo, n_rounds=4, clients_per_round=8,
+                    local_steps=2, batch_size=8,
+                    seed=seed, error_feedback=ef,
+                    tra=TRAConfig(enabled=tra_on, loss_rate=loss_rate,
+                                  **tra_kw),
+                    netsim=netsim or NetSimConfig(), **kw)
+
+
+def _vec(params):
+    return np.asarray(ravel_pytree(params)[0])
+
+
+def _run_server_params(cfg, data, nets):
+    srv = FederatedServer(cfg, data, nets)
+    srv.run()
+    loss = np.array([r.train_loss for r in srv.history], np.float32)
+    return _vec(srv.params), loss
+
+
+# ---------------------------------------------------------------------------
+# channel="iid" default == pre-netsim engine, bitwise (frozen legacy step)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "qfedavg"])
+@pytest.mark.parametrize("tra_on,ef", [(False, False), (True, False),
+                                       (True, True)])
+def test_iid_default_bit_identical_to_legacy(algo, tra_on, ef, data,
+                                             nets):
+    cfg = _cfg(algo=algo, tra_on=tra_on, ef=ef)
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed))
+
+    state, logs = eng.run_block(eng.init_state(params0), 0,
+                                cfg.n_rounds)
+
+    legacy = jax.jit(make_legacy_round_step(cfg, eng.cohort))
+    lstate = eng.init_state(params0)
+    llosses = []
+    for t in range(cfg.n_rounds):
+        lstate, out = legacy(eng.ctx, lstate, jnp.int32(t))
+        llosses.append(np.asarray(out["loss"]))
+
+    np.testing.assert_array_equal(logs["loss"],
+                                  np.asarray(llosses, np.float32))
+    np.testing.assert_array_equal(_vec(state.params),
+                                  _vec(lstate.params))
+    if ef:
+        np.testing.assert_array_equal(np.asarray(state.ef_mem),
+                                      np.asarray(lstate.ef_mem))
+    if algo == "scaffold":
+        np.testing.assert_array_equal(np.asarray(state.c_i),
+                                      np.asarray(lstate.c_i))
+    # the default carries no simulator state
+    assert state.net.channel.shape == (0,)
+    assert state.net.logbw.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Gilbert–Elliott statistics: stationary rate + burst length
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rate,burst", [(0.1, 4.0), (0.3, 12.0),
+                                        (0.2, 1.0)])
+def test_ge_stationary_loss_fraction(rate, burst):
+    """Empirical loss fraction of a stationary-started chain matches the
+    configured rate — "10% loss" means the same thing in both channel
+    modes — and the mean loss-burst length tracks burst_len."""
+    rng = np.random.default_rng(17)
+    C, P = 64, 4000
+    u_t = jnp.asarray(rng.random((C, P)).astype(np.float32))
+    u_e = jnp.asarray(rng.random((C, P)).astype(np.float32))
+    pi_b = float(stationary_bad_frac(rate, 0.0, 1.0))
+    s0 = jnp.asarray((rng.random(C) < pi_b).astype(np.int32))
+    p_gb, p_bg = ge_transition_probs(jnp.float32(rate),
+                                     jnp.float32(burst), 0.0, 1.0)
+    mask, s_fin = ge_packet_mask(u_t, u_e, s0, p_gb, p_bg, 0.0, 1.0,
+                                 impl="ref")
+    lost = 1.0 - np.asarray(mask)
+    assert abs(lost.mean() - rate) < 0.02, (lost.mean(), rate)
+    # mean loss-burst length (runs of consecutive zeros per client)
+    runs = []
+    for row in lost:
+        c = 0
+        for v in row:
+            if v:
+                c += 1
+            elif c:
+                runs.append(c)
+                c = 0
+        if c:
+            runs.append(c)
+    assert abs(np.mean(runs) - burst) / burst < 0.15, \
+        (np.mean(runs), burst)
+    # final states are a plausible stationary sample
+    assert abs(np.asarray(s_fin).mean() - pi_b) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# netsim_mask kernel parity (interpret emulation on CPU) + vmap batching
+# ---------------------------------------------------------------------------
+def test_netsim_mask_kernel_matches_ref():
+    rng = np.random.default_rng(3)
+    C, P = 16, 37
+    u_t = jnp.asarray(rng.random((C, P)).astype(np.float32))
+    u_e = jnp.asarray(rng.random((C, P)).astype(np.float32))
+    s0 = jnp.asarray((rng.random(C) < 0.3).astype(np.int32))
+    # per-client heterogeneous parameters
+    rates = jnp.asarray(rng.uniform(0.05, 0.4, C).astype(np.float32))
+    p_gb, p_bg = ge_transition_probs(rates, jnp.float32(6.0), 0.02, 0.9)
+    mk, sk = ge_packet_mask(u_t, u_e, s0, p_gb, p_bg, 0.02, 0.9,
+                            impl="kernel")
+    mr, sr = ge_packet_mask(u_t, u_e, s0, p_gb, p_bg, 0.02, 0.9,
+                            impl="ref")
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+    # vmapped kernel call (the sweep engine's scenario axis) == stacked
+    # single-scenario calls
+    mv, sv = jax.vmap(lambda a, b, c: ge_packet_mask(
+        a, b, c, p_gb, p_bg, 0.02, 0.9, impl="kernel"))(
+        jnp.stack([u_t, u_e]), jnp.stack([u_e, u_t]),
+        jnp.stack([s0, 1 - s0]))
+    m1, s1 = ge_packet_mask(u_e, u_t, 1 - s0, p_gb, p_bg, 0.02, 0.9,
+                            impl="kernel")
+    np.testing.assert_array_equal(np.asarray(mv[0]), np.asarray(mk))
+    np.testing.assert_array_equal(np.asarray(mv[1]), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(sv[1]), np.asarray(s1))
+
+    # C not divisible by the preferred client tile still lowers the
+    # kernel (block clamped to a divisor of C; an explicit kernel
+    # request is never silently downgraded). p_bg is scalar here —
+    # ops broadcasts it per client.
+    mo, so = ge_packet_mask(u_t[:5], u_e[:5], s0[:5], p_gb[:5],
+                            p_bg, 0.02, 0.9, impl="kernel")
+    mo_r, so_r = ge_packet_mask(u_t[:5], u_e[:5], s0[:5], p_gb[:5],
+                                p_bg, 0.02, 0.9, impl="ref")
+    np.testing.assert_array_equal(np.asarray(mo), np.asarray(mo_r))
+    np.testing.assert_array_equal(np.asarray(so), np.asarray(so_r))
+
+
+# ---------------------------------------------------------------------------
+# state carry: channel/bandwidth persist across rounds AND block cuts
+# ---------------------------------------------------------------------------
+def test_netsim_state_carries_across_blocks(data, nets):
+    cfg = _cfg(netsim=NetSimConfig(channel="gilbert_elliott",
+                                   burst_len=6.0, bw_ar1=True,
+                                   bw_rho=0.8))
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed))
+
+    s_once = eng.init_state(params0)
+    ch0 = np.asarray(s_once.net.channel)
+    bw0 = np.asarray(s_once.net.logbw)
+    np.testing.assert_allclose(bw0, np.log(nets.upload_mbps),
+                               rtol=1e-6)
+    s_once, _ = eng.run_block(s_once, 0, 4)
+
+    s_cut = eng.init_state(params0)
+    s_cut, _ = eng.run_block(s_cut, 0, 2)
+    mid_ch = np.asarray(s_cut.net.channel)
+    s_cut, _ = eng.run_block(s_cut, 2, 2)
+
+    # block partitioning is invariant (state threads through the cut)
+    np.testing.assert_array_equal(np.asarray(s_once.net.channel),
+                                  np.asarray(s_cut.net.channel))
+    np.testing.assert_array_equal(np.asarray(s_once.net.logbw),
+                                  np.asarray(s_cut.net.logbw))
+    np.testing.assert_array_equal(_vec(s_once.params),
+                                  _vec(s_cut.params))
+    # ... and the state actually evolves
+    assert not np.array_equal(np.asarray(s_once.net.logbw), bw0)
+    changed = (np.asarray(s_once.net.channel) != ch0) \
+        | (mid_ch != ch0)
+    assert changed.any()
+
+
+# ---------------------------------------------------------------------------
+# sweep: S heterogeneous-channel scenarios == S independent runs, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ef", [False, True])
+def test_heterogeneous_channel_sweep_bitwise(ef, data, nets):
+    """Scenarios vary seed, loss rate AND burst length; each cell must
+    reproduce its independent FederatedServer run bit-for-bit,
+    including the final channel states."""
+    cells = ((0, 0.1, 2.0), (3, 0.3, 8.0), (5, 0.25, 16.0))
+    cfgs = [_cfg(seed=s, loss_rate=r, ef=ef,
+                 netsim=NetSimConfig(channel="gilbert_elliott",
+                                     burst_len=b))
+            for s, r, b in cells]
+    eng = SweepEngine.from_configs(cfgs, data, nets)
+    states, logs = eng.run()
+    for s, cfg in enumerate(cfgs):
+        params, loss = _run_server_params(cfg, data, nets)
+        np.testing.assert_array_equal(logs["loss"][s], loss)
+        np.testing.assert_array_equal(
+            _vec(jax.tree.map(lambda x: x[s], states.params)), params)
+    # channel states are per-scenario and evolved independently
+    assert states.net.channel.shape == (3, N_CLIENTS)
+
+
+def test_ge_channel_requires_tra(data, nets):
+    """A non-iid channel models lossy TRA uploads; with TRA off it
+    would be silently inert, so the engine must refuse the config."""
+    cfg = _cfg(tra_on=False,
+               netsim=NetSimConfig(channel="gilbert_elliott"))
+    with pytest.raises(ValueError, match="tra.enabled"):
+        FederatedServer(cfg, data, nets)
+
+
+def test_sweep_rejects_mixed_netsim_models(data, nets):
+    with pytest.raises(ValueError, match="static"):
+        SweepEngine.from_configs(
+            [_cfg(seed=0),
+             _cfg(seed=1, netsim=NetSimConfig(
+                 channel="gilbert_elliott"))], data, nets)
+    # varying burst length / rho / deadline seconds is fine
+    SweepEngine.from_configs(
+        [_cfg(seed=0, netsim=NetSimConfig(channel="gilbert_elliott",
+                                          burst_len=2.0)),
+         _cfg(seed=1, netsim=NetSimConfig(channel="gilbert_elliott",
+                                          burst_len=9.0))], data, nets)
+
+
+# ---------------------------------------------------------------------------
+# per-client loss rates (satellite): scalar == broadcast special case
+# ---------------------------------------------------------------------------
+def test_per_client_rates_scalar_broadcast_bit_identical(data, nets):
+    r = 0.2
+    base = _cfg(loss_rate=r, ef=True)
+    per = _cfg(loss_rate=r, ef=True,
+               tra_kw=dict(per_client_loss=True))
+    uniform_nets = ClientNetworks(nets.upload_mbps,
+                                  np.full(N_CLIENTS, r))
+    p0, l0 = _run_server_params(base, data, uniform_nets)
+    p1, l1 = _run_server_params(per, data, uniform_nets)
+    np.testing.assert_array_equal(p0, p1)
+    np.testing.assert_array_equal(l0, l1)
+
+
+def test_per_client_rates_are_used(data, nets):
+    """Heterogeneous per-client rates must change the run (the trace
+    model's exponential fit is no longer discarded), and an all-zero
+    rate vector must reproduce the lossless run."""
+    per = _cfg(loss_rate=0.2, tra_kw=dict(per_client_loss=True))
+    hetero = ClientNetworks(nets.upload_mbps,
+                            np.linspace(0.0, 0.8, N_CLIENTS))
+    p_het, _ = _run_server_params(per, data, hetero)
+    p_scalar, _ = _run_server_params(_cfg(loss_rate=0.2), data, hetero)
+    assert not np.array_equal(p_het, p_scalar)
+
+    zero = ClientNetworks(nets.upload_mbps, np.zeros(N_CLIENTS))
+    p_zero, _ = _run_server_params(per, data, zero)
+    p_off, _ = _run_server_params(_cfg(loss_rate=0.0), data, zero)
+    np.testing.assert_array_equal(p_zero, p_off)
+
+
+def test_per_client_rates_sweep_bitwise(data, nets):
+    hetero = ClientNetworks(nets.upload_mbps,
+                            np.minimum(np.random.default_rng(9)
+                                       .exponential(1 / 23.0, N_CLIENTS),
+                                       1.0))
+    cfgs = [_cfg(seed=s, tra_kw=dict(per_client_loss=True))
+            for s in (0, 4)]
+    eng = SweepEngine.from_configs(cfgs, data, hetero)
+    assert eng.ctx.loss_rate.shape == (2, N_CLIENTS)
+    states, logs = eng.run()
+    for s, cfg in enumerate(cfgs):
+        params, loss = _run_server_params(cfg, data, hetero)
+        np.testing.assert_array_equal(logs["loss"][s], loss)
+        np.testing.assert_array_equal(
+            _vec(jax.tree.map(lambda x: x[s], states.params)), params)
+
+
+# ---------------------------------------------------------------------------
+# deadline delivery model
+# ---------------------------------------------------------------------------
+def test_deadline_infinite_is_noop_tiny_drops_all(data, nets):
+    base = _cfg()
+    p_base, _ = _run_server_params(base, data, nets)
+
+    lax_dl = dataclasses.replace(
+        base, netsim=NetSimConfig(deadline=True, deadline_s=1e9))
+    p_lax, _ = _run_server_params(lax_dl, data, nets)
+    np.testing.assert_array_equal(p_base, p_lax)
+
+    tight = dataclasses.replace(
+        base, netsim=NetSimConfig(deadline=True, deadline_s=1e-9))
+    p_tight, _ = _run_server_params(tight, data, nets)
+    # every upload misses the deadline -> the aggregated model is the
+    # all-zero debiased mean, not the baseline result
+    assert not np.array_equal(p_base, p_tight)
+    assert np.allclose(p_tight, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# AR(1) bandwidth: stationary distribution keeps the FCC calibration
+# ---------------------------------------------------------------------------
+def test_ar1_logspeed_preserves_calibration():
+    rng = np.random.default_rng(11)
+    n = 4000
+    logbw = jnp.asarray(np.log(rng.lognormal(SPEED_MU, SPEED_SIGMA, n)
+                               ).astype(np.float32))
+    rho = jnp.float32(0.8)
+    for t in range(50):
+        eps = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        logbw = ar1_logspeed_step(logbw, rho, eps)
+    x = np.asarray(logbw)
+    assert abs(x.mean() - SPEED_MU) < 0.15
+    assert abs(x.std() - SPEED_SIGMA) < 0.15
+    # the paper's two FCC speed quantiles survive the dynamics
+    speed = np.exp(x)
+    assert abs((speed < 2.0).mean() - 0.24) < 0.03
+    assert abs((speed < 8.0).mean() - 0.49) < 0.03
+    # rho=0 redraws i.i.d. from the calibrated marginal
+    eps = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    redrawn = ar1_logspeed_step(logbw, jnp.float32(0.0), eps)
+    np.testing.assert_allclose(np.asarray(redrawn),
+                               SPEED_MU + SPEED_SIGMA * np.asarray(eps),
+                               rtol=1e-5)

@@ -88,6 +88,21 @@ def main() -> None:
             if ef_rows is not None:
                 _check(tag + "/ef", ek, er, rtol=0, atol=0)
 
+    # netsim_mask (Gilbert-Elliott recurrence, exact parity) ---------------
+    from repro.kernels.netsim_mask.ops import ge_packet_mask
+    from repro.netsim.channel import ge_transition_probs
+    u_t = jnp.asarray(rng.random((16, P)).astype(np.float32))
+    u_e = jnp.asarray(rng.random((16, P)).astype(np.float32))
+    s0 = jnp.asarray((rng.random(16) < 0.25).astype(np.int32))
+    rates = jnp.asarray(rng.uniform(0.05, 0.35, 16).astype(np.float32))
+    p_gb, p_bg = ge_transition_probs(rates, jnp.float32(6.0), 0.0, 1.0)
+    mk, sk = ge_packet_mask(u_t, u_e, s0, p_gb, p_bg, 0.0, 1.0,
+                            impl="kernel")
+    mr, sr = ge_packet_mask(u_t, u_e, s0, p_gb, p_bg, 0.0, 1.0,
+                            impl="ref")
+    _check("netsim_mask/mask", mk, mr, rtol=0, atol=0)
+    _check("netsim_mask/state", sk, sr, rtol=0, atol=0)
+
     print(f"kernel parity smoke passed on backend={jax.default_backend()}")
 
 
