@@ -1,9 +1,11 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # Headline JSONs land in benchmarks/results/: BENCH_sweep.json (grid
 # amortization), BENCH_uplink_fused.json (megakernel HBM-pass
-# accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3)
-# and BENCH_netsim.json (on-device Gilbert-Elliott mask generation +
-# burst-grid scenarios/sec).
+# accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3),
+# BENCH_netsim.json (on-device Gilbert-Elliott mask generation +
+# burst-grid scenarios/sec) and BENCH_selection.json (the traced
+# selection-policy x loss-rate grid as one program + per-policy
+# participation/bias histograms).
 import argparse
 import sys
 import time
@@ -23,13 +25,13 @@ def main(argv=None) -> None:
 
     from benchmarks import (beyond, engine_bench, kernel_bench,
                             netsim_bench, paper_figures, roofline,
-                            sweep_bench)
+                            selection_bench, sweep_bench)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
         benches += list(paper_figures.ALL) + list(beyond.ALL) \
             + list(engine_bench.ALL) + list(sweep_bench.ALL) \
-            + list(netsim_bench.ALL)
+            + list(netsim_bench.ALL) + list(selection_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

@@ -71,6 +71,7 @@ import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core import client_updates as cu
+from repro.core import selection as sel_mod
 from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
@@ -81,6 +82,7 @@ from repro.netsim.channel import ge_transition_probs
 from repro.netsim.delivery import deadline_delivered, round_upload_seconds
 from repro.netsim.state import NetSimState, init_net_state
 from repro.network.packets import n_packets
+from repro.network.trace import log_upload_speeds
 
 ENGINE_ALGOS = ("fedavg", "qfedavg", "pfedme", "perfedavg", "afl",
                 "scaffold")
@@ -96,6 +98,12 @@ class EngineState(NamedTuple):
     lam: jnp.ndarray      # (N,) AFL mixture weights (always allocated)
     net: NetSimState      # channel states + log-bandwidth levels
     #                       ((N,) each, or (0,) when netsim is off)
+    # selection score memory (core/selection.py): last masked squared
+    # update norm / last train loss per client, written for the cohort
+    # each round and read by the gradient_norm / loss_aware policies at
+    # the NEXT round's selection. (0,) when the policy needs neither.
+    gnorm_mem: jnp.ndarray  # (N,) f32, or (0,)
+    loss_mem: jnp.ndarray   # (N,) f32, or (0,)
 
 
 class ScenarioCtx(NamedTuple):
@@ -122,16 +130,25 @@ class ScenarioCtx(NamedTuple):
     bad_loss: jnp.ndarray    # () f32 BAD-state per-packet loss (GE)
     bw_rho: jnp.ndarray      # () f32 AR(1) round-to-round correlation
     deadline_s: jnp.ndarray  # () f32 per-round upload deadline
+    # selection-policy knobs (core/selection.py; policy id is static,
+    # or traced as the one-hot below when cfg.sel.traced)
+    sel_threshold: jnp.ndarray  # () f32 bandwidth_threshold cut (Mbps)
+    sel_temp: jnp.ndarray    # () f32 softmax temperature on the score
+    sel_explore: jnp.ndarray  # () f32 0 = pure policy, 1 = uniform
+    sel_policy: jnp.ndarray  # (len(POLICIES),) f32 one-hot (traced
+    #                          policy mode; unused-but-traced otherwise)
+    sel_logbw: jnp.ndarray   # (N,) f32 static log upload speeds for
+    #                          the bandwidth score, or (0,) when the
+    #                          trace draw wasn't provided
 
 
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
     """Uniform sample of ``k`` clients without replacement from the
     eligible set, entirely on device (Gumbel top-k with uniform
-    weights)."""
-    u = jax.random.uniform(key, eligible.shape, minval=1e-12, maxval=1.0)
-    gumbel = -jnp.log(-jnp.log(u))
-    scores = jnp.where(eligible, gumbel, -jnp.inf)
-    return jax.lax.top_k(scores, k)[1]
+    weights). Back-compat alias: the score-weighted generalisation —
+    the engine's selection-policy family — lives in
+    ``core/selection.py`` (``select_clients``)."""
+    return sel_mod.select_clients(key, None, eligible, k)
 
 
 def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
@@ -166,6 +183,9 @@ SWEEP_VARYING_FIELDS = ("seed", "selection", "eligible_ratio")
 SWEEP_VARYING_TRA_FIELDS = ("loss_rate", "threshold_mbps")
 SWEEP_VARYING_NETSIM_FIELDS = ("burst_len", "good_loss", "bad_loss",
                                "bw_rho", "deadline_s")
+# selection-policy knobs (core/selection.py); the policy NAME joins
+# them when cfg.sel.traced (it rides ScenarioCtx as a one-hot then)
+SWEEP_VARYING_SEL_FIELDS = sel_mod.SWEEP_VARYING_SEL_FIELDS
 
 
 def static_signature(cfg):
@@ -176,8 +196,14 @@ def static_signature(cfg):
         cfg.tra, **{f: 0.0 for f in SWEEP_VARYING_TRA_FIELDS})
     ns = dataclasses.replace(
         cfg.netsim, **{f: 0.0 for f in SWEEP_VARYING_NETSIM_FIELDS})
+    sel = dataclasses.replace(
+        cfg.sel, **{f: 0.0 for f in SWEEP_VARYING_SEL_FIELDS})
+    if sel.traced:
+        # the policy choice itself is traced (ScenarioCtx.sel_policy):
+        # traced configs share one program across all policies
+        sel = dataclasses.replace(sel, policy="uniform")
     return dataclasses.replace(
-        cfg, tra=tra, netsim=ns, seed=0, selection="all",
+        cfg, tra=tra, netsim=ns, sel=sel, seed=0, selection="all",
         eligible_ratio=1.0)
 
 
@@ -252,6 +278,12 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
         net=init_net_state(cfg.netsim if netsim is None else netsim, N,
                            base_key=base_key, loss_rate=loss_rate,
                            upload_mbps=upload_mbps),
+        gnorm_mem=jnp.zeros((N,), jnp.float32)
+        if cfg.sel.traced or cfg.sel.policy == "gradient_norm"
+        else jnp.zeros((0,), jnp.float32),
+        loss_mem=jnp.zeros((N,), jnp.float32)
+        if cfg.sel.traced or cfg.sel.policy == "loss_aware"
+        else jnp.zeros((0,), jnp.float32),
     )
 
 
@@ -286,6 +318,19 @@ def make_round_step(cfg, cohort: int):
     use_ge = ns.channel == "gilbert_elliott"
     use_bw = ns.bw_ar1
     use_dl = ns.deadline
+    # selection policy: the id (or "traced") is static program
+    # structure; its knobs ride ScenarioCtx (core/selection.py)
+    sel = cfg.sel
+    traced_sel = sel.traced
+    policy = sel.policy
+    need_gnorm = traced_sel or policy == "gradient_norm"
+    need_loss = traced_sel or policy == "loss_aware"
+    if not traced_sel and policy == "netsim_state" and not use_ge:
+        raise ValueError(
+            "selection policy 'netsim_state' scores the Gilbert-"
+            "Elliott channel state and requires "
+            "netsim.channel='gilbert_elliott' (with the iid channel "
+            "there is no state to prefer)")
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -313,9 +358,28 @@ def make_round_step(cfg, cohort: int):
         u_emit = u_all[N + n_batch + C * P:].reshape(C, P) \
             if use_ge else None
 
-        gumbel = -jnp.log(-jnp.log(u_sel))
-        ids = jax.lax.top_k(jnp.where(ctx.eligible, gumbel, -jnp.inf),
-                            C)[1]
+        # selection: weighted Gumbel-top-k over the eligibility mask.
+        # Scores read the CARRY (previous round's channel/bandwidth/
+        # score memory) — selection happens before this round's
+        # training, exactly like a real server. policy="uniform"
+        # (logits None) evaluates the legacy expression bitwise.
+        sel_bw = state.net.logbw if use_bw else ctx.sel_logbw
+        if traced_sel:
+            logits = sel_mod.traced_policy_logits(
+                ctx.sel_policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel, n_clients=N)
+        else:
+            logits = sel_mod.policy_logits(
+                policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel)
+        ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
+                                           C)
         counts = dd.counts[ids]                              # (C,)
         idx = jnp.minimum((u_idx * counts[:, None, None]
                            ).astype(jnp.int32), counts[:, None, None] - 1)
@@ -415,6 +479,9 @@ def make_round_step(cfg, cohort: int):
             w_agg, mult, want_ssq = state.lam[ids], None, False
         else:
             w_agg, mult, want_ssq = weights, None, False
+        # gradient_norm selection scores next round's cohort by the
+        # masked norms the megakernel computes in this same pass
+        want_ssq = want_ssq or need_gnorm
 
         agg, new_ef_rows, ssq = uplink_ops.uplink_round(
             xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
@@ -463,9 +530,17 @@ def make_round_step(cfg, cohort: int):
             lam = jnp.maximum(lam, 0.0)
             lam_new = lam / lam.sum()
 
+        # selection score memory: scatter this round's cohort stats for
+        # the NEXT round's gradient_norm / loss_aware scores
+        gnorm_new = state.gnorm_mem.at[ids].set(ssq) if need_gnorm \
+            else state.gnorm_mem
+        loss_new = state.loss_mem.at[ids].set(aux["loss0"]) \
+            if need_loss else state.loss_mem
+
         new_state = EngineState(new_params, new_ef, c_global_new,
                                 c_i_new, lam_new,
-                                NetSimState(net_channel, net_logbw))
+                                NetSimState(net_channel, net_logbw),
+                                gnorm_new, loss_new)
         return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
 
     return step
@@ -510,9 +585,16 @@ class RoundScanEngine:
                 and upload_mbps is None:
             raise ValueError("netsim bandwidth/deadline models need "
                              "the trace draw (pass nets.upload_mbps)")
+        if (cfg.sel.traced or cfg.sel.policy == "bandwidth_threshold") \
+                and upload_mbps is None:
+            raise ValueError(
+                "the bandwidth_threshold selection score (and the "
+                "traced policy family, which includes it) needs the "
+                "trace draw (pass nets.upload_mbps)")
         self._upload_mbps = None if upload_mbps is None \
             else np.asarray(upload_mbps, np.float32)
         ns = cfg.netsim
+        sel = cfg.sel
         self.ctx = ScenarioCtx(
             base_key=jax.random.PRNGKey(cfg.seed),
             loss_rate=loss_rate,
@@ -523,7 +605,14 @@ class RoundScanEngine:
             good_loss=jnp.float32(ns.good_loss),
             bad_loss=jnp.float32(ns.bad_loss),
             bw_rho=jnp.float32(ns.bw_rho),
-            deadline_s=jnp.float32(ns.deadline_s))
+            deadline_s=jnp.float32(ns.deadline_s),
+            sel_threshold=jnp.float32(sel.threshold_mbps),
+            sel_temp=jnp.float32(sel.temperature),
+            sel_explore=jnp.float32(sel.explore),
+            sel_policy=jnp.asarray(sel_mod.policy_onehot(sel.policy)),
+            sel_logbw=log_upload_speeds(self._upload_mbps)
+            if self._upload_mbps is not None
+            else jnp.zeros((0,), jnp.float32))
         self._step, self._single, self._block = _cached_jits(
             cfg, self.cohort)
 

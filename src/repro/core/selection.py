@@ -1,0 +1,210 @@
+"""Traced client-selection policy family (paper §5, the bias axis).
+
+The paper's core negative result is that *threshold-based* client
+selection biases the participant pool toward well-connected clients and
+deteriorates accuracy/fairness — TRA exists so the server can select
+REGARDLESS of network condition. To express both sides of that
+comparison (and the gradient-/loss-aware policies of the related work,
+arXiv 2111.11204 / 2502.17260), selection is a score-based family:
+
+    ids = top_k( where(eligible, gumbel + logits, -inf), k )
+
+i.e. weighted Gumbel-top-k: adding i.i.d. Gumbel noise to logits and
+taking the arg-top-k samples without replacement from the Plackett–Luce
+distribution with weights softmax(logits). ``logits = None`` (the
+``uniform`` policy) skips the add entirely, so the sampler reduces —
+bitwise — to the uniform Gumbel-top-k the engine has always run
+(tests/test_selection.py locks this against the frozen legacy step).
+
+Policies (``SelectionConfig.policy``) and their per-client score
+inputs:
+
+    uniform              —            (no score; today's behaviour)
+    bandwidth_threshold  s_i = 1[bw_i >= threshold_mbps]
+                         the paper's biased baseline, scored from the
+                         static FCC trace draw or, with netsim bw_ar1
+                         on, the live AR(1) ``NetSimState.logbw``
+    gradient_norm        s_i = log1p(|Δ_i|²)  — importance selection
+                         from the masked per-client squared update
+                         norms the uplink megakernel already computes
+                         (q-FedAvg's ssq output), carried per client
+                         in ``EngineState.gnorm_mem``
+    loss_aware           s_i = last train loss of client i
+                         (``EngineState.loss_mem``; power-of-choice /
+                         AFL-style preference for struggling clients)
+    netsim_state         s_i = 1[channel_i == GOOD] — prefer clients
+                         currently in the Gilbert–Elliott good state
+
+The knobs split exactly the way the engine splits all knobs:
+
+  * **static** (change the compiled program): ``policy`` and
+    ``traced``. With ``traced=False`` the chosen policy's score is the
+    only one in the program (and ``uniform`` compiles to the legacy
+    expression).
+  * **traced** (scenario-varying, ride ``ScenarioCtx``):
+    ``threshold_mbps``, ``temperature``, ``explore`` — and, with
+    ``traced=True``, the policy itself: every policy's raw score is
+    computed and contracted with a per-scenario one-hot
+    (``ScenarioCtx.sel_policy``), so a selection-policy × loss-rate
+    grid compiles to ONE vmap(scan) program
+    (benchmarks/selection_bench.py asserts the compile count).
+
+Effective logits for every non-uniform policy:
+
+    logits_i = (1 - explore) * s_i / max(temperature, TEMP_EPS)
+
+``temperature`` → 0 sharpens toward the hard policy (the
+bandwidth_threshold step score with temperature ~0.05 reproduces the
+paper's hard threshold baseline: below-threshold clients' softmax
+weight is ~e^{-20} per unit score); ``explore`` → 1 anneals any policy
+back to uniform (logits → 0). Both interpolate in logit space, i.e. a
+geometric — not arithmetic — mixture with the uniform distribution.
+
+Key-splitting contract: the engine draws ONE uniform block per round
+from ``fold_in(base_key, t)`` and slices the first N variates for
+selection (see ``make_round_step``), so cohorts are decorrelated across
+rounds and any block partitioning of a run replays the same cohorts.
+``select_clients`` offers the same sampler for standalone callers with
+their own key discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.network.trace import DEFAULT_THRESHOLD_MBPS
+
+POLICIES = ("uniform", "bandwidth_threshold", "gradient_norm",
+            "loss_aware", "netsim_state")
+
+# temperature guard: temperature=0 means "as hard as f32 allows", not
+# a NaN program
+TEMP_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionConfig:
+    """Selection-policy knobs, split static vs traced (module doc)."""
+    policy: str = "uniform"     # static: one of POLICIES
+    # traced=True compiles the whole policy family into one program and
+    # moves the policy choice into ScenarioCtx.sel_policy (one-hot) —
+    # required for cross-policy sweeps; per-policy score-state carries
+    # are all allocated.
+    traced: bool = False
+    # -- traced knobs (SWEEP_VARYING_SEL_FIELDS) ---------------------------
+    threshold_mbps: float = DEFAULT_THRESHOLD_MBPS  # bandwidth_threshold
+    temperature: float = 1.0    # softmax temperature on the raw score
+    explore: float = 0.0        # 0 = pure policy, 1 = uniform
+
+    def __post_init__(self):
+        assert self.policy in POLICIES, self.policy
+
+
+# SelectionConfig fields a scenario may vary without changing program
+# structure (plus ``policy`` itself when ``traced=True``).
+SWEEP_VARYING_SEL_FIELDS = ("threshold_mbps", "temperature", "explore")
+
+
+def policy_onehot(policy: str) -> np.ndarray:
+    """(len(POLICIES),) f32 one-hot for ``ScenarioCtx.sel_policy``."""
+    v = np.zeros(len(POLICIES), np.float32)
+    v[POLICIES.index(policy)] = 1.0
+    return v
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+def select_from_uniforms(u, logits, eligible, k: int) -> jnp.ndarray:
+    """Weighted Gumbel-top-k from pre-drawn uniforms ``u`` (N,).
+
+    ``logits = None`` is the uniform policy and evaluates the exact
+    legacy expression (no ``+ 0.0`` — bit-identity is load-bearing).
+    Ineligible clients score -inf: they are selected only after the
+    eligible set is exhausted (k > #eligible degrades gracefully by
+    construction — -inf sorts last in ``top_k``).
+    """
+    gumbel = -jnp.log(-jnp.log(u))
+    keys = gumbel if logits is None else gumbel + logits
+    return jax.lax.top_k(jnp.where(eligible, keys, -jnp.inf), k)[1]
+
+
+def select_clients(key, scores, eligible, k: int) -> jnp.ndarray:
+    """Sample ``k`` clients without replacement, ∝ softmax(scores) over
+    the eligible set (scores=None → uniform). Standalone entry point;
+    the engine uses ``select_from_uniforms`` on its per-round uniform
+    block so one threefry invocation covers the whole round."""
+    u = jax.random.uniform(key, eligible.shape, minval=1e-12, maxval=1.0)
+    return select_from_uniforms(u, scores, eligible, k)
+
+
+# ---------------------------------------------------------------------------
+# per-policy scores
+# ---------------------------------------------------------------------------
+def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
+                     gnorm_mem=None, loss_mem=None, channel=None):
+    """(N,) raw score s_i for one policy (None for ``uniform``).
+
+    Inputs may be None when a policy's score source is absent (traced
+    mode over a config without that model); the score then degrades to
+    zeros — i.e. that policy behaves as ``uniform`` — rather than
+    erroring inside a traced program.
+    """
+    if policy == "uniform":
+        return None
+    if policy == "bandwidth_threshold":
+        if logbw is None or logbw.shape[-1] == 0:
+            return None
+        thr = jnp.log(jnp.maximum(threshold_mbps, TEMP_EPS))
+        return (logbw >= thr).astype(jnp.float32)
+    if policy == "gradient_norm":
+        if gnorm_mem is None or gnorm_mem.shape[-1] == 0:
+            return None
+        # log1p keeps never-selected clients (mem 0) at score 0 instead
+        # of log(eps) → -inf-ish starvation
+        return jnp.log1p(gnorm_mem)
+    if policy == "loss_aware":
+        if loss_mem is None or loss_mem.shape[-1] == 0:
+            return None
+        return loss_mem
+    if policy == "netsim_state":
+        if channel is None or channel.shape[-1] == 0:
+            return None
+        return 1.0 - channel.astype(jnp.float32)
+    raise ValueError(f"unknown selection policy {policy!r}")
+
+
+def policy_logits(policy: str, *, temperature, explore,
+                  threshold_mbps=None, logbw=None, gnorm_mem=None,
+                  loss_mem=None, channel=None):
+    """Effective Gumbel-top-k logits for one static policy
+    (None ⇔ uniform sampling, the legacy-bitwise path)."""
+    s = raw_policy_score(policy, threshold_mbps=threshold_mbps,
+                         logbw=logbw, gnorm_mem=gnorm_mem,
+                         loss_mem=loss_mem, channel=channel)
+    if s is None:
+        return None
+    return (1.0 - explore) * s / jnp.maximum(temperature, TEMP_EPS)
+
+
+def traced_policy_logits(sel_policy, *, temperature, explore,
+                         threshold_mbps, logbw=None, gnorm_mem=None,
+                         loss_mem=None, channel=None, n_clients=None):
+    """Logits with the POLICY ITSELF traced: every policy's raw score
+    is computed and contracted with the (len(POLICIES),) one-hot
+    ``sel_policy`` — so scenarios of one vmapped program can each run a
+    different policy. With an exact one-hot the contraction reproduces
+    the selected policy's logits (0·s_p contributes exactly 0 for
+    finite scores; all raw scores here are finite)."""
+    rows = []
+    for p in POLICIES:
+        s = raw_policy_score(p, threshold_mbps=threshold_mbps,
+                             logbw=logbw, gnorm_mem=gnorm_mem,
+                             loss_mem=loss_mem, channel=channel)
+        rows.append(jnp.zeros((n_clients,), jnp.float32)
+                    if s is None else s)
+    raw = jnp.einsum("p,pn->n", sel_policy, jnp.stack(rows))
+    return (1.0 - explore) * raw / jnp.maximum(temperature, TEMP_EPS)

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import client_updates as cu
 from repro.core import tra as tra_mod
 from repro.core.engine import RoundScanEngine
+from repro.core.selection import SelectionConfig
 from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
 from repro.core.sweep import SweepEngine
@@ -51,6 +52,14 @@ class FLConfig:
     lr: float = 0.1
     selection: str = "all"            # all|ratio|threshold
     eligible_ratio: float = 1.0       # for selection="ratio"
+    # score-based cohort sampling OVER the eligible set (the traced
+    # selection-policy family, core/selection.py): uniform (default,
+    # bit-identical to the pre-policy engine) | bandwidth_threshold
+    # (the paper's biased baseline) | gradient_norm | loss_aware |
+    # netsim_state. ``selection`` above gates *eligibility*; ``sel``
+    # weights the draw among the eligible.
+    sel: SelectionConfig = dataclasses.field(
+        default_factory=SelectionConfig)
     tra: TRAConfig = dataclasses.field(default_factory=TRAConfig)
     # stateful network simulator (repro/netsim): Gilbert-Elliott bursty
     # loss, AR(1) time-varying bandwidth, deadline delivery. The default

@@ -45,19 +45,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import selection as sel_mod
 from repro.core import tra as tra_mod
 from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
                                SWEEP_VARYING_NETSIM_FIELDS,
+                               SWEEP_VARYING_SEL_FIELDS,
                                SWEEP_VARYING_TRA_FIELDS, EngineState,
                                ScenarioCtx, _static_key,
                                init_engine_state, make_round_step,
                                static_signature)
 from repro.core.mlp import mlp_init
+from repro.core.selection import SelectionConfig
 from repro.netsim.config import NetSimConfig
 from repro.data.synthetic import (DeviceDataset, FederatedDataset,
                                   stage_on_device,
                                   stage_scenarios_on_device)
-from repro.network.trace import (eligible_mask_device, sample_networks,
+from repro.network.trace import (eligible_mask_device, log_upload_speeds,
+                                 sample_networks,
                                  stage_network_scenarios)
 
 # sweep-program cache, mirroring engine._STEP_CACHE: one compiled
@@ -78,6 +82,11 @@ class Scenario:
     # knobs (None -> the sweep config's cfg.netsim; static model flags
     # must agree across a sweep, traced knobs may vary per cell)
     netsim: Optional[NetSimConfig] = None
+    # selection-policy scenario axis (None -> cfg.sel): threshold /
+    # temperature / explore may vary per cell; the policy NAME may vary
+    # only when the sweep config is traced (cfg.sel.traced — the
+    # one-hot rides ScenarioCtx.sel_policy)
+    sel: Optional[SelectionConfig] = None
     # per-client trace draws, needed when tra.per_client_loss or a
     # netsim bandwidth/deadline model is on
     packet_loss: Optional[np.ndarray] = None   # (N,) drop rates
@@ -100,7 +109,7 @@ def scenario_from_config(cfg, data: FederatedDataset,
         threshold_mbps=cfg.tra.threshold_mbps))
     return Scenario(seed=cfg.seed, loss_rate=cfg.tra.loss_rate,
                     sufficient=sufficient, eligible=eligible, data=data,
-                    netsim=cfg.netsim,
+                    netsim=cfg.netsim, sel=cfg.sel,
                     packet_loss=nets.packet_loss,
                     upload_mbps=nets.upload_mbps)
 
@@ -176,6 +185,33 @@ class SweepEngine:
             raise ValueError("netsim bandwidth/deadline models need "
                              "per-client speeds on every Scenario "
                              "(upload_mbps)")
+        # per-scenario selection knobs (static policy/traced flags must
+        # agree — they pick the compiled program; with traced=True the
+        # policy itself becomes the per-scenario one-hot)
+        sels = self._sels = [s.sel if s.sel is not None else cfg.sel
+                             for s in self.scenarios]
+        for i, sc in enumerate(sels):
+            ok = sc.traced == cfg.sel.traced and (
+                cfg.sel.traced or sc.policy == cfg.sel.policy)
+            if not ok:
+                raise ValueError(
+                    f"scenario {i} selects a different selection "
+                    f"policy/traced mode than the sweep config; only "
+                    f"{SWEEP_VARYING_SEL_FIELDS} may vary per cell "
+                    f"(the policy itself only with sel.traced=True)")
+        need_bw_score = cfg.sel.traced \
+            or cfg.sel.policy == "bandwidth_threshold"
+        if need_bw_score \
+                and any(s.upload_mbps is None for s in self.scenarios):
+            raise ValueError(
+                "the bandwidth_threshold selection score (and the "
+                "traced policy family) needs per-client speeds on "
+                "every Scenario (upload_mbps)")
+        if all(s.upload_mbps is not None for s in self.scenarios):
+            sel_logbw = jnp.stack([log_upload_speeds(s.upload_mbps)
+                                   for s in self.scenarios])
+        else:
+            sel_logbw = jnp.zeros((S, 0), jnp.float32)
         self.ctx = ScenarioCtx(
             base_key=jnp.stack([jax.random.PRNGKey(s.seed)
                                 for s in self.scenarios]),
@@ -194,7 +230,16 @@ class SweepEngine:
                                  jnp.float32),
             bw_rho=jnp.asarray([ns.bw_rho for ns in nsims], jnp.float32),
             deadline_s=jnp.asarray([ns.deadline_s for ns in nsims],
-                                   jnp.float32))
+                                   jnp.float32),
+            sel_threshold=jnp.asarray([sc.threshold_mbps for sc in sels],
+                                      jnp.float32),
+            sel_temp=jnp.asarray([sc.temperature for sc in sels],
+                                 jnp.float32),
+            sel_explore=jnp.asarray([sc.explore for sc in sels],
+                                    jnp.float32),
+            sel_policy=jnp.asarray(np.stack(
+                [sel_mod.policy_onehot(sc.policy) for sc in sels])),
+            sel_logbw=sel_logbw)
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
         if cache_key not in _SWEEP_CACHE:
             step = make_round_step(cfg, self.cohort)
@@ -202,7 +247,10 @@ class SweepEngine:
                                    sufficient=0,
                                    data=0 if self.data_batched else None,
                                    burst_len=0, good_loss=0, bad_loss=0,
-                                   bw_rho=0, deadline_s=0)
+                                   bw_rho=0, deadline_s=0,
+                                   sel_threshold=0, sel_temp=0,
+                                   sel_explore=0, sel_policy=0,
+                                   sel_logbw=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
             _SWEEP_CACHE[cache_key] = (step, jax.jit(
                 lambda ctx, state, ts: jax.lax.scan(
@@ -230,9 +278,10 @@ class SweepEngine:
                 raise ValueError(
                     f"config {i} differs from config 0 in a static "
                     f"field; only {SWEEP_VARYING_FIELDS}, tra."
-                    f"{SWEEP_VARYING_TRA_FIELDS} and netsim."
-                    f"{SWEEP_VARYING_NETSIM_FIELDS} may vary in one "
-                    f"sweep")
+                    f"{SWEEP_VARYING_TRA_FIELDS}, netsim."
+                    f"{SWEEP_VARYING_NETSIM_FIELDS} and sel."
+                    f"{SWEEP_VARYING_SEL_FIELDS} (plus sel.policy "
+                    f"under sel.traced=True) may vary in one sweep")
         if isinstance(datas, FederatedDataset):
             datas = [datas] * S
         if len(datas) != S:
@@ -255,7 +304,7 @@ class SweepEngine:
                          sufficient=tra_mod.sufficiency_report(
                              n, c.tra.threshold_mbps),
                          eligible=eligible[i], data=d,
-                         netsim=c.netsim,
+                         netsim=c.netsim, sel=c.sel,
                          packet_loss=n.packet_loss,
                          upload_mbps=n.upload_mbps)
                 for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]

@@ -57,7 +57,8 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                          weight_decay=tcfg.weight_decay)
     remat = tcfg.remat != "none"
 
-    def fl_step(params, opt_state, batch, sufficient, key, loss_rate=None):
+    def fl_step(params, opt_state, batch, sufficient, key, loss_rate=None,
+                participating=None):
         rate = tra.loss_rate if loss_rate is None else loss_rate
         # --- thread Client: local gradient computation ------------------
         def client_loss(p, b):
@@ -68,7 +69,18 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             jax.value_and_grad(client_loss), in_axes=(None, 0))(params, batch)
         # grads: pytree with leading client axis C (sharded over data)
 
+        # per-client squared update norms |g_i|^2 — the gradient_norm
+        # selection policy's score input (the engine path gets this from
+        # the megakernel's ssq output; here it is a cheap metrics pass)
+        client_ssq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)),
+                    axis=tuple(range(1, g.ndim)))
+            for g in jax.tree_util.tree_leaves(grads))
+
         # --- TRA upload + debiased aggregation (Eq. 1 family) -----------
+        # ``participating`` (C,) f32 cohort mask: non-members contribute
+        # nothing and the mean runs over the cohort size. None (the
+        # default) keeps the everyone-participates math bitwise intact.
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         keys = jax.random.split(key, len(leaves) * n_clients).reshape(
             len(leaves), n_clients, 2)
@@ -82,6 +94,11 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             # sufficient clients retransmit -> full delivery
             suff = sufficient.reshape((n_clients,) + (1,) * len(lf_shape))
             masks = jnp.maximum(masks, suff.astype(masks.dtype))
+            if participating is not None:
+                part = participating.reshape(
+                    (n_clients,) + (1,) * len(lf_shape))
+                masks = masks * part
+                denom = jnp.maximum(participating.sum(), 1.0)
             gm = g * masks.astype(g.dtype)
             if tra.debias == "per_coord_count":
                 num = (gm.astype(jnp.float32) * masks).sum(0)
@@ -90,9 +107,13 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             elif tra.debias == "group_rate":   # paper Eq. (1), corrected
                 scale = jnp.where(suff.astype(bool), 1.0,
                                   1.0 / jnp.maximum(1.0 - rate, 1e-6))
-                agg = (gm.astype(jnp.float32) * scale).mean(0)
+                gs = gm.astype(jnp.float32) * scale
+                agg = gs.sum(0) / denom if participating is not None \
+                    else gs.mean(0)
             else:                              # "none": biased mean
-                agg = gm.astype(jnp.float32).mean(0)
+                gf = gm.astype(jnp.float32)
+                agg = gf.sum(0) / denom if participating is not None \
+                    else gf.mean(0)
             agg_leaves.append(agg.astype(g.dtype))
         agg_grads = jax.tree_util.tree_unflatten(treedef, agg_leaves)
 
@@ -104,7 +125,7 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         updates, opt_state = opt.update(agg_grads, opt_state, params)
         params = apply_updates(params, updates)
         metrics = {"loss": losses.mean(), "client_losses": losses,
-                   "grad_norm": gnorm}
+                   "grad_norm": gnorm, "client_grad_ssq": client_ssq}
         return params, opt_state, metrics
 
     return fl_step, opt
@@ -163,6 +184,46 @@ def _run_sweep(cfg, tcfg, tra, args, rates):
     return 0
 
 
+# Selection policies the host-driven launch loop supports. netsim_state
+# is excluded: its score is the engine's device-resident Gilbert–Elliott
+# channel state, which this driver does not simulate.
+LAUNCH_POLICIES = ("uniform", "bandwidth_threshold", "gradient_norm",
+                   "loss_aware")
+
+
+def _make_selector(args, n_clients: int):
+    """Host-side round selector: returns (select, update) closures over
+    the per-client score memories, mirroring the engine's
+    gnorm_mem/loss_mem carries (select reads the memories as of the
+    PREVIOUS round; update scatters this round's cohort metrics)."""
+    from repro.core import selection as sel_mod
+    from repro.network.trace import log_upload_speeds, sample_networks
+
+    nets = sample_networks(np.random.default_rng(0), n_clients)
+    logbw = log_upload_speeds(nets.upload_mbps)
+    gnorm_mem = np.zeros(n_clients, np.float32)
+    loss_mem = np.zeros(n_clients, np.float32)
+    eligible = jnp.ones(n_clients, bool)
+
+    def select(step_idx: int) -> np.ndarray:
+        logits = sel_mod.policy_logits(
+            args.selection_policy,
+            temperature=jnp.float32(args.selection_temperature),
+            explore=jnp.float32(0.0),
+            threshold_mbps=jnp.float32(2.0),
+            logbw=logbw, gnorm_mem=jnp.asarray(gnorm_mem),
+            loss_mem=jnp.asarray(loss_mem))
+        key = jax.random.fold_in(jax.random.PRNGKey(500), step_idx)
+        return np.asarray(sel_mod.select_clients(key, logits, eligible,
+                                                 args.cohort))
+
+    def update(ids: np.ndarray, metrics: Dict[str, Any]):
+        gnorm_mem[ids] = np.asarray(metrics["client_grad_ssq"])[ids]
+        loss_mem[ids] = np.asarray(metrics["client_losses"])[ids]
+
+    return select, update
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
@@ -172,6 +233,16 @@ def main(argv=None):
     ap.add_argument("--insufficient", type=int, default=1,
                     help="# clients with lossy uploads")
     ap.add_argument("--loss-rate", type=float, default=0.1)
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="clients selected per round; default: every "
+                         "client participates (the legacy path, "
+                         "bitwise unchanged)")
+    ap.add_argument("--selection-policy", default="uniform",
+                    choices=LAUNCH_POLICIES,
+                    help="host-driven cohort selection score "
+                         "(core/selection.py; netsim_state needs the "
+                         "engine's channel state and is engine-only)")
+    ap.add_argument("--selection-temperature", type=float, default=1.0)
     ap.add_argument("--sweep-loss-rates", default=None,
                     help="comma-separated TRA loss rates, e.g. "
                          "'0.0,0.1,0.3': train all scenarios at once as "
@@ -188,26 +259,45 @@ def main(argv=None):
     tcfg = TrainConfig(lr=args.lr)
     tra = TRAConfig(loss_rate=args.loss_rate, debias=args.debias)
     if args.sweep_loss_rates:
+        if args.cohort is not None:
+            ap.error("--cohort is not supported on the sweep route "
+                     "(per-scenario cohorts would break the shared "
+                     "batch); use the single-scenario route")
         rates = [float(x) for x in args.sweep_loss_rates.split(",")]
         return _run_sweep(cfg, tcfg, tra, args, rates)
     C = args.clients
+    if args.cohort is not None and not 0 < args.cohort <= C:
+        ap.error(f"--cohort must be in [1, {C}]")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     fl_step, opt = make_fl_train_step(cfg, tcfg, tra, C)
     opt_state = opt.init(params)
     fl_step = jax.jit(fl_step)
     sufficient = jnp.asarray(
         [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
+    select = update = None
+    if args.cohort is not None:
+        select, update = _make_selector(args, C)
     rng = np.random.default_rng(0)
     for i in range(args.steps):
         batches = [synth_batch(cfg, args.batch, args.seq, rng)
                    for _ in range(C)]
         batch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
         t0 = time.time()
+        participating, ids = None, None
+        if select is not None:
+            ids = select(i)
+            mask = np.zeros(C, np.float32)
+            mask[ids] = 1.0
+            participating = jnp.asarray(mask)
         params, opt_state, m = fl_step(params, opt_state, batch, sufficient,
-                                       jax.random.PRNGKey(1000 + i))
+                                       jax.random.PRNGKey(1000 + i),
+                                       participating=participating)
+        if update is not None:
+            update(ids, m)
+        cohort_note = "" if ids is None else f" cohort={sorted(ids.tolist())}"
         print(f"round {i:4d} loss={float(m['loss']):8.4f} "
-              f"clients={np.asarray(m['client_losses']).round(3)} "
-              f"({time.time()-t0:.2f}s)", flush=True)
+              f"clients={np.asarray(m['client_losses']).round(3)}"
+              f"{cohort_note} ({time.time()-t0:.2f}s)", flush=True)
         assert np.isfinite(float(m["loss"]))
     return 0
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.network.trace import ar1_logspeed_step
+from repro.network.trace import ar1_logspeed_step, log_upload_speeds
 
 # fold_in tag for the per-round bandwidth innovation draw (applied to
 # the already-folded round key, so each round gets a fresh stream that
@@ -35,7 +35,7 @@ BW_FOLD = 0x42574550  # "BWEP"
 
 def init_logbw(upload_mbps) -> jnp.ndarray:
     """(N,) f32 initial log-levels from a static trace draw."""
-    return jnp.log(jnp.asarray(upload_mbps, jnp.float32))
+    return log_upload_speeds(upload_mbps)
 
 
 def logbw_round_step(round_key, logbw, rho) -> jnp.ndarray:

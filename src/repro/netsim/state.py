@@ -24,6 +24,14 @@ class NetSimState(NamedTuple):
     logbw: jnp.ndarray    # (N,) f32 log upload Mbps levels, or (0,)
 
 
+def good_state_scores(net: NetSimState) -> jnp.ndarray:
+    """(N,) f32 1.0 for clients currently in the GOOD Gilbert–Elliott
+    state, 0.0 in BAD — the raw score of the ``netsim_state`` selection
+    policy (core/selection.py reads ``state.net.channel`` through the
+    same expression)."""
+    return 1.0 - net.channel.astype(jnp.float32)
+
+
 def init_net_state(ns: NetSimConfig, n_clients: int, *, base_key=None,
                    loss_rate=None, upload_mbps=None) -> NetSimState:
     """Fresh per-scenario simulator state.

@@ -120,6 +120,17 @@ def stage_network_scenarios(nets_list, selections, *,
     return jnp.stack(rows)
 
 
+def log_upload_speeds(upload_mbps):
+    """(N,) f32 log upload speeds — the per-client score input of the
+    ``bandwidth_threshold`` selection policy (core/selection.py) and
+    the initial levels of the netsim AR(1) bandwidth walk
+    (`netsim/bandwidth.init_logbw` delegates here, so the static-score
+    and walk-initialisation views of one trace draw are bit-identical).
+    """
+    import jax.numpy as jnp
+    return jnp.log(jnp.asarray(upload_mbps, jnp.float32))
+
+
 def ar1_logspeed_step(logbw, rho, eps, mu: float = SPEED_MU,
                       sigma: float = SPEED_SIGMA):
     """One round of the stationarity-preserving AR(1) on log upload speed.

@@ -1,0 +1,322 @@
+"""Traced client-selection policy family (repro/core/selection.py).
+
+* Sampler properties (hypothesis): ineligible clients are never
+  selected; when k exceeds the eligible count every eligible client is
+  selected before any ineligible one; weighted Gumbel-top-k empirical
+  frequencies match softmax(logits); the engine's fold_in(base_key, t)
+  key chain gives round-decorrelated, uniformly-covered cohorts.
+* Logit algebra: the traced one-hot contraction reproduces each static
+  policy's logits bitwise; explore=1 anneals every policy to uniform
+  (zero logits); temperature scales logits as 1/temp.
+* Bit-identity lock: ``policy="uniform"`` — even with non-default
+  traced knobs riding ScenarioCtx — computes EXACTLY the frozen PR-3
+  round step for fedavg/scaffold/qfedavg, ±TRA, ±error feedback.
+* Engine-level policy semantics: a hard (tiny-temperature)
+  bandwidth_threshold policy never selects below-threshold clients;
+  gradient_norm / loss_aware score memories are scattered at the
+  selected cohort each round and read at the NEXT round's selection;
+  configs whose score source is absent are refused (netsim_state
+  without a GE channel, bandwidth_threshold without a trace draw).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import selection as sel_mod
+from repro.core.engine import RoundScanEngine
+from repro.core.mlp import mlp_init
+from repro.core.selection import (POLICIES, SelectionConfig,
+                                  policy_logits, policy_onehot,
+                                  select_clients, select_from_uniforms,
+                                  traced_policy_logits)
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.tra import TRAConfig
+from repro.data.synthetic import generate_synthetic
+from repro.netsim import NetSimConfig
+from repro.network.trace import ClientNetworks
+from tests._hyp import given, settings, st
+from tests._legacy_engine import make_legacy_round_step
+
+N_CLIENTS = 20
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_synthetic(np.random.default_rng(0),
+                              n_clients=N_CLIENTS, alpha=0.5, beta=0.5)
+
+
+@pytest.fixture(scope="module")
+def nets():
+    return ClientNetworks(np.linspace(0.5, 20.0, N_CLIENTS),
+                          np.full(N_CLIENTS, 0.05))
+
+
+def _cfg(policy="uniform", seed=0, algo="fedavg", tra_on=True, ef=False,
+         netsim=None, **sel_kw):
+    return FLConfig(algo=algo, n_rounds=4, clients_per_round=8,
+                    local_steps=2, batch_size=8, eval_every=100,
+                    seed=seed, error_feedback=ef,
+                    sel=SelectionConfig(policy=policy, **sel_kw),
+                    tra=TRAConfig(enabled=tra_on, loss_rate=0.2),
+                    netsim=netsim or NetSimConfig())
+
+
+def _vec(params):
+    return np.asarray(ravel_pytree(params)[0])
+
+
+# ---------------------------------------------------------------------------
+# sampler properties (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.booleans())
+def test_ineligible_never_selected(seed, k, weighted):
+    rng = np.random.default_rng(seed)
+    n = 16
+    eligible = np.zeros(n, bool)
+    eligible[rng.choice(n, size=rng.integers(k, n + 1),
+                        replace=False)] = True
+    scores = jnp.asarray(rng.normal(size=n).astype(np.float32)) \
+        if weighted else None
+    ids = np.asarray(select_clients(jax.random.PRNGKey(seed), scores,
+                                    jnp.asarray(eligible), k))
+    assert eligible[ids].all()
+    assert len(set(ids.tolist())) == k  # without replacement
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_k_beyond_eligible_takes_every_eligible_first(seed, m):
+    """-inf sorts last in top_k, so k > #eligible degrades gracefully:
+    the k selected always contain ALL m eligible clients."""
+    rng = np.random.default_rng(seed)
+    n, k = 12, 8
+    assert m < k
+    eligible = np.zeros(n, bool)
+    eligible[rng.choice(n, size=m, replace=False)] = True
+    scores = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    ids = np.asarray(select_clients(jax.random.PRNGKey(seed), scores,
+                                    jnp.asarray(eligible), k))
+    assert set(np.flatnonzero(eligible)) <= set(ids.tolist())
+    # and the eligible ones come first in the ranking
+    assert eligible[ids[:m]].all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.lists(st.floats(-2.0, 2.0), min_size=5, max_size=5))
+def test_weighted_topk_frequencies_match_softmax(seed, score_list):
+    """k=1 weighted Gumbel-top-k samples ∝ softmax(logits)."""
+    scores = jnp.asarray(np.asarray(score_list, np.float32))
+    eligible = jnp.ones(5, bool)
+    m = 4000
+    keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    ids = jax.jit(jax.vmap(
+        lambda key: select_clients(key, scores, eligible, 1)[0]))(keys)
+    freq = np.bincount(np.asarray(ids), minlength=5) / m
+    p = np.exp(score_list - np.max(score_list))
+    p /= p.sum()
+    np.testing.assert_allclose(freq, p, atol=4.5 / np.sqrt(m))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fold_in_chain_decorrelates_rounds(seed):
+    """The engine's per-round key chain fold_in(base_key, t) yields
+    cohorts that differ across rounds and cover clients uniformly."""
+    n, k, rounds = 10, 3, 240
+    base = jax.random.PRNGKey(seed)
+    eligible = jnp.ones(n, bool)
+
+    def cohort(t):
+        u = jax.random.uniform(jax.random.fold_in(base, t), (n,),
+                               minval=1e-12, maxval=1.0)
+        return select_from_uniforms(u, None, eligible, k)
+
+    ids = np.asarray(jax.jit(jax.vmap(cohort))(jnp.arange(rounds)))
+    # 240 uniform draws from the C(10,3)=120 possible cohorts should
+    # hit most of them (expected ~104); a correlated chain would not
+    assert len({tuple(sorted(row)) for row in ids}) > 80
+    freq = np.bincount(ids.ravel(), minlength=n) / (rounds * k)
+    np.testing.assert_allclose(freq, 1.0 / n, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# logit algebra
+# ---------------------------------------------------------------------------
+def _score_inputs(rng, n=12):
+    return dict(threshold_mbps=jnp.float32(2.0),
+                logbw=jnp.asarray(rng.normal(1.0, 1.5, n)
+                                  .astype(np.float32)),
+                gnorm_mem=jnp.asarray(rng.uniform(0, 3, n)
+                                      .astype(np.float32)),
+                loss_mem=jnp.asarray(rng.uniform(0, 2, n)
+                                     .astype(np.float32)),
+                channel=jnp.asarray((rng.random(n) < 0.4)
+                                    .astype(np.int32)))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_traced_onehot_matches_static_logits(policy):
+    """einsum against an exact one-hot reproduces the selected policy's
+    logits bitwise (0 · finite score contributes exactly 0)."""
+    inputs = _score_inputs(np.random.default_rng(5))
+    kw = dict(temperature=jnp.float32(0.7), explore=jnp.float32(0.2))
+    static = policy_logits(policy, **kw, **inputs)
+    traced = traced_policy_logits(jnp.asarray(policy_onehot(policy)),
+                                  **kw, **inputs, n_clients=12)
+    if policy == "uniform":
+        assert static is None
+        np.testing.assert_array_equal(np.asarray(traced), 0.0)
+    else:
+        np.testing.assert_array_equal(np.asarray(traced),
+                                      np.asarray(static))
+
+
+def test_explore_and_temperature_semantics():
+    inputs = _score_inputs(np.random.default_rng(7))
+    base = policy_logits("loss_aware", temperature=jnp.float32(1.0),
+                         explore=jnp.float32(0.0), **inputs)
+    # explore=1 anneals any policy to uniform (zero logits)
+    np.testing.assert_array_equal(
+        np.asarray(policy_logits("loss_aware",
+                                 temperature=jnp.float32(1.0),
+                                 explore=jnp.float32(1.0), **inputs)),
+        0.0)
+    # temperature scales logits as 1/temp
+    half = policy_logits("loss_aware", temperature=jnp.float32(0.5),
+                         explore=jnp.float32(0.0), **inputs)
+    np.testing.assert_allclose(np.asarray(half), 2 * np.asarray(base),
+                               rtol=1e-6)
+    # temperature=0 is guarded, not NaN
+    hard = policy_logits("loss_aware", temperature=jnp.float32(0.0),
+                         explore=jnp.float32(0.0), **inputs)
+    assert np.isfinite(np.asarray(hard)).all()
+
+
+def test_raw_score_semantics():
+    inputs = _score_inputs(np.random.default_rng(9))
+    s = sel_mod.raw_policy_score("bandwidth_threshold", **inputs)
+    np.testing.assert_array_equal(
+        np.asarray(s),
+        (np.asarray(inputs["logbw"]) >= np.log(2.0)).astype(np.float32))
+    s = sel_mod.raw_policy_score("gradient_norm", **inputs)
+    np.testing.assert_allclose(
+        np.asarray(s), np.log1p(np.asarray(inputs["gnorm_mem"])),
+        rtol=1e-6)
+    s = sel_mod.raw_policy_score("netsim_state", **inputs)
+    np.testing.assert_array_equal(
+        np.asarray(s), 1.0 - np.asarray(inputs["channel"]))
+    # absent score sources degrade to uniform, not an error
+    assert sel_mod.raw_policy_score(
+        "gradient_norm", gnorm_mem=jnp.zeros((0,))) is None
+    assert sel_mod.raw_policy_score("uniform", **inputs) is None
+
+
+# ---------------------------------------------------------------------------
+# bit-identity lock: uniform policy == frozen PR-3 step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "qfedavg"])
+@pytest.mark.parametrize("tra_on,ef", [(False, False), (True, True)])
+def test_uniform_policy_bit_identical_to_legacy(algo, tra_on, ef, data,
+                                                nets):
+    """The uniform policy — with NON-default traced knobs riding
+    ScenarioCtx — still evaluates the exact legacy Gumbel-top-k
+    expression (logits=None skips the add; knobs are dead inputs)."""
+    cfg = _cfg(algo=algo, tra_on=tra_on, ef=ef,
+               temperature=0.3, explore=0.7, threshold_mbps=5.0)
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed))
+
+    state, logs = eng.run_block(eng.init_state(params0), 0,
+                                cfg.n_rounds)
+
+    legacy = jax.jit(make_legacy_round_step(cfg, eng.cohort))
+    lstate = eng.init_state(params0)
+    lids = []
+    for t in range(cfg.n_rounds):
+        lstate, out = legacy(eng.ctx, lstate, jnp.int32(t))
+        lids.append(np.asarray(out["ids"]))
+
+    np.testing.assert_array_equal(logs["ids"], np.asarray(lids))
+    np.testing.assert_array_equal(_vec(state.params),
+                                  _vec(lstate.params))
+    if ef:
+        np.testing.assert_array_equal(np.asarray(state.ef_mem),
+                                      np.asarray(lstate.ef_mem))
+    # the uniform policy carries no score memory
+    assert state.gnorm_mem.shape == (0,)
+    assert state.loss_mem.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# engine-level policy semantics
+# ---------------------------------------------------------------------------
+def test_hard_bandwidth_threshold_never_selects_below(data, nets):
+    cfg = _cfg("bandwidth_threshold", temperature=0.01)
+    srv = FederatedServer(cfg, data, nets)
+    state = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+    _, logs = srv.engine.run_block(state, 0, 16)
+    below = np.flatnonzero(nets.upload_mbps < 2.0)  # 2 of 20 clients
+    assert below.size > 0
+    assert np.intersect1d(below, np.unique(logs["ids"])).size == 0
+
+
+@pytest.mark.parametrize("policy,field", [("gradient_norm",
+                                           "gnorm_mem"),
+                                          ("loss_aware", "loss_mem")])
+def test_score_memory_updates_at_cohort(policy, field, data, nets):
+    """Score memory is scattered at the selected ids each round; after
+    one round exactly the first cohort has nonzero entries."""
+    cfg = _cfg(policy)
+    srv = FederatedServer(cfg, data, nets)
+    state = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+    state, logs = srv.engine.run_block(state, 0, 1)
+    mem = np.asarray(getattr(state, field))
+    assert mem.shape == (N_CLIENTS,)
+    sel_ids = np.asarray(logs["ids"][0])
+    assert (mem[sel_ids] > 0).all()
+    unsel = np.setdiff1d(np.arange(N_CLIENTS), sel_ids)
+    np.testing.assert_array_equal(mem[unsel], 0.0)
+
+
+def test_netsim_state_policy_requires_ge_channel(data, nets):
+    with pytest.raises(ValueError, match="netsim_state"):
+        FederatedServer(_cfg("netsim_state"), data, nets)
+    # with the channel on, the config is accepted
+    FederatedServer(_cfg("netsim_state",
+                         netsim=NetSimConfig(channel="gilbert_elliott")),
+                    data, nets)
+
+
+def test_bandwidth_policy_requires_trace_draw(data, nets):
+    cfg = _cfg("bandwidth_threshold")
+    suff = np.ones(N_CLIENTS, np.float32)
+    elig = np.ones(N_CLIENTS, bool)
+    with pytest.raises(ValueError, match="upload_mbps"):
+        RoundScanEngine(cfg, data, suff, elig)
+    with pytest.raises(ValueError, match="upload_mbps"):
+        RoundScanEngine(dataclasses.replace(
+            cfg, sel=SelectionConfig(traced=True)), data, suff, elig)
+
+
+def test_gradient_norm_biases_toward_large_updates(data, nets):
+    """A very cold gradient_norm policy re-selects high-update-norm
+    clients instead of cycling uniformly: over a short run its
+    participation histogram is more concentrated than uniform's."""
+    hist = {}
+    for policy in ("uniform", "gradient_norm"):
+        cfg = _cfg(policy, temperature=0.02 if policy != "uniform"
+                   else 1.0)
+        srv = FederatedServer(cfg, data, nets)
+        state = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+        _, logs = srv.engine.run_block(state, 0, 24)
+        hist[policy] = np.bincount(logs["ids"].ravel(),
+                                   minlength=N_CLIENTS)
+    assert hist["gradient_norm"].std() > hist["uniform"].std()

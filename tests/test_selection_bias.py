@@ -1,0 +1,86 @@
+"""Reproduce the paper's selection-bias result (§5) on a CPU-sized run.
+
+Under the FCC-calibrated client population (`network/trace.py`:
+lognormal upload speeds, ~24% of clients below the 2 Mbps OpenMined
+threshold), the ``bandwidth_threshold`` policy — the baseline the paper
+argues against — under-selects the bottom bandwidth quartile by a large
+measured margin, while ``uniform`` + TRA (the paper's proposal: select
+regardless of network condition, tolerate the loss) keeps every
+quartile's participation at its population share.
+
+Deterministic seeds throughout; the same check runs in CI as
+tools/selection_smoke.py.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mlp import mlp_init
+from repro.core.selection import SelectionConfig
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.tra import TRAConfig
+from repro.network.trace import DEFAULT_THRESHOLD_MBPS, sample_networks
+
+N_CLIENTS = 40
+N_ROUNDS = 40
+COHORT = 8
+
+
+@pytest.fixture(scope="module")
+def fcc_nets():
+    return sample_networks(np.random.default_rng(2026), N_CLIENTS)
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.data.synthetic import generate_synthetic
+    return generate_synthetic(np.random.default_rng(0),
+                              n_clients=N_CLIENTS, alpha=0.5, beta=0.5)
+
+
+def _cfg(policy, **sel_kw):
+    return FLConfig(algo="fedavg", n_rounds=N_ROUNDS,
+                    clients_per_round=COHORT, local_steps=1,
+                    batch_size=8, eval_every=100, seed=0,
+                    sel=SelectionConfig(policy=policy, **sel_kw),
+                    tra=TRAConfig(enabled=True, loss_rate=0.1))
+
+
+def _participation(cfg, data, nets):
+    """(N,) fraction of cohort slots each client received."""
+    srv = FederatedServer(cfg, data, nets)
+    state = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+    _, logs = srv.engine.run_block(state, 0, N_ROUNDS)
+    return np.bincount(logs["ids"].ravel(), minlength=N_CLIENTS) \
+        / (N_ROUNDS * COHORT)
+
+
+def test_threshold_policy_starves_bottom_quartile(fcc_nets, data):
+    bottom_q = np.argsort(fcc_nets.upload_mbps)[:N_CLIENTS // 4]
+    # the FCC calibration puts ~24% of clients below 2 Mbps, so the
+    # bottom speed quartile is (almost exactly) the sub-threshold set
+    below = fcc_nets.upload_mbps < DEFAULT_THRESHOLD_MBPS
+    assert 0.15 <= below.mean() <= 0.35
+
+    p_uni = _participation(_cfg("uniform"), data, fcc_nets)
+    p_thr = _participation(_cfg("bandwidth_threshold",
+                                temperature=0.05), data, fcc_nets)
+
+    share_uni = p_uni[bottom_q].sum()
+    share_thr = p_thr[bottom_q].sum()
+    # uniform + TRA: participation tracks the population share (0.25)
+    assert abs(share_uni - 0.25) < 0.08, share_uni
+    # threshold policy: the paper's bias — bottom quartile starved
+    assert share_thr < 0.10, share_thr
+    assert share_uni - share_thr > 0.15
+    # sub-threshold clients specifically get (essentially) nothing
+    assert p_thr[below].sum() < 0.02
+
+
+def test_explore_restores_participation(fcc_nets, data):
+    """explore=1 anneals the biased policy back to uniform: the bottom
+    quartile recovers its population share."""
+    bottom_q = np.argsort(fcc_nets.upload_mbps)[:N_CLIENTS // 4]
+    p = _participation(_cfg("bandwidth_threshold", temperature=0.05,
+                            explore=1.0), data, fcc_nets)
+    assert abs(p[bottom_q].sum() - 0.25) < 0.08

@@ -269,3 +269,70 @@ def test_engines_share_compiled_programs(data, nets):
                             engine="per_round", n_rounds=7,
                             eval_every=3), data, nets)
     assert s3.engine._single is s1.engine._single
+
+
+# ---------------------------------------------------------------------------
+# selection-policy axis: traced cross-policy grid == standalone runs
+# ---------------------------------------------------------------------------
+def test_traced_policy_loss_sweep_cell_bitwise(data, nets):
+    """A selection-policy × loss-rate grid compiled as ONE traced
+    program: every cell must reproduce its standalone FederatedServer
+    run (same traced SelectionConfig) bit-for-bit."""
+    from repro.core.selection import SelectionConfig
+    from repro.netsim import NetSimConfig
+    ns = NetSimConfig(channel="gilbert_elliott", burst_len=4.0)
+    cfgs = [_cfg(seed=s, loss_rate=r, netsim=ns,
+                 sel=SelectionConfig(policy=p, traced=True,
+                                     temperature=tmp))
+            for s, (p, tmp) in enumerate(
+                [("uniform", 1.0), ("bandwidth_threshold", 0.05),
+                 ("loss_aware", 0.5)])
+            for r in (0.1, 0.3)]
+    eng = SweepEngine.from_configs(cfgs, data, nets)
+    states, logs = eng.run()
+    for s in (0, 3, 5):  # one cell per policy
+        srv = FederatedServer(cfgs[s], data, nets)
+        srv.run()
+        np.testing.assert_array_equal(
+            logs["loss"][s],
+            np.array([r.train_loss for r in srv.history], np.float32))
+        np.testing.assert_array_equal(
+            _params_vec(states, s),
+            np.asarray(ravel_pytree(srv.params)[0]))
+
+
+def test_sweep_rejects_mixed_selection_modes(data, nets):
+    """Static policies differing across cells need traced=True; mixing
+    traced and untraced cells is two different programs."""
+    from repro.core.selection import SelectionConfig
+    with pytest.raises(ValueError, match="sel"):
+        SweepEngine.from_configs(
+            [_cfg(seed=0, sel=SelectionConfig(policy="uniform")),
+             _cfg(seed=1, sel=SelectionConfig(
+                 policy="bandwidth_threshold"))], data, nets)
+    with pytest.raises(ValueError, match="sel"):
+        SweepEngine.from_configs(
+            [_cfg(seed=0, sel=SelectionConfig(traced=True)),
+             _cfg(seed=1, sel=SelectionConfig(traced=False))],
+            data, nets)
+    # same static policy with different traced knobs is one program
+    SweepEngine.from_configs(
+        [_cfg(seed=0, sel=SelectionConfig(policy="bandwidth_threshold",
+                                          temperature=0.1)),
+         _cfg(seed=1, sel=SelectionConfig(policy="bandwidth_threshold",
+                                          threshold_mbps=8.0))],
+        data, nets)
+
+
+def test_selection_knobs_share_compiled_programs(data, nets):
+    """Traced sel knobs (threshold/temperature/explore) ride
+    ScenarioCtx: engines differing only in them share one program."""
+    from repro.core.selection import SelectionConfig
+    s1 = FederatedServer(
+        _cfg(seed=0, sel=SelectionConfig(policy="bandwidth_threshold",
+                                         temperature=0.1)), data, nets)
+    s2 = FederatedServer(
+        _cfg(seed=1, sel=SelectionConfig(policy="bandwidth_threshold",
+                                         threshold_mbps=8.0,
+                                         explore=0.3)), data, nets)
+    assert s1.engine._block is s2.engine._block

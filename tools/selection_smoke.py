@@ -1,0 +1,108 @@
+"""CI smoke: selection-policy family (repro/core/selection.py).
+
+Two deterministic checks, exits non-zero on any failure:
+
+1. Bias reproduction (paper §5): under an FCC-calibrated client draw,
+   the ``bandwidth_threshold`` policy starves the bottom bandwidth
+   quartile (<10% of cohort slots) while ``uniform`` + TRA keeps it at
+   its population share (25% ± 8%).
+2. Traced policy × loss-rate sweep: a 2-scenario grid with the policy
+   one-hot riding ScenarioCtx (``traced=True``) must reproduce each
+   standalone traced run bit-for-bit (losses, cohorts, final params).
+
+Run as: PYTHONPATH=src python tools/selection_smoke.py
+"""
+import dataclasses
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    import jax
+    from jax.flatten_util import ravel_pytree
+
+    from repro.core.mlp import mlp_init
+    from repro.core.selection import SelectionConfig
+    from repro.core.server import FederatedServer, FLConfig
+    from repro.core.sweep import SweepEngine
+    from repro.core.tra import TRAConfig
+    from repro.data.synthetic import generate_synthetic
+    from repro.network.trace import sample_networks
+
+    failures = 0
+    n, rounds, k = 40, 40, 8
+    fcc = sample_networks(np.random.default_rng(2026), n)
+    data = generate_synthetic(np.random.default_rng(0), n_clients=n,
+                              alpha=0.5, beta=0.5)
+
+    def cfg(policy, **sel_kw):
+        return FLConfig(algo="fedavg", n_rounds=rounds,
+                        clients_per_round=k, local_steps=1,
+                        batch_size=8, eval_every=100, seed=0,
+                        sel=SelectionConfig(policy=policy, **sel_kw),
+                        tra=TRAConfig(enabled=True, loss_rate=0.1))
+
+    def participation(c):
+        srv = FederatedServer(c, data, fcc)
+        state = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+        _, logs = srv.engine.run_block(state, 0, rounds)
+        return np.bincount(logs["ids"].ravel(), minlength=n) \
+            / (rounds * k)
+
+    bottom_q = np.argsort(fcc.upload_mbps)[:n // 4]
+    share_uni = participation(cfg("uniform"))[bottom_q].sum()
+    share_thr = participation(
+        cfg("bandwidth_threshold", temperature=0.05))[bottom_q].sum()
+    checks = {
+        "uniform+TRA bottom-quartile share ~ 0.25":
+            abs(share_uni - 0.25) < 0.08,
+        "bandwidth_threshold starves bottom quartile":
+            share_thr < 0.10,
+        "measured bias margin > 0.15":
+            share_uni - share_thr > 0.15,
+    }
+    print(f"bottom-quartile cohort share: uniform={share_uni:.3f} "
+          f"threshold={share_thr:.3f}")
+    for name, ok in checks.items():
+        print(f"bias: {name}: {'ok' if ok else 'FAILED'}")
+        failures += 0 if ok else 1
+
+    # traced 2-scenario sweep == standalone traced runs, bitwise
+    cfgs = [cfg("uniform", traced=True),
+            cfg("bandwidth_threshold", traced=True, temperature=0.05)]
+    cfgs[1] = dataclasses.replace(
+        cfgs[1], tra=TRAConfig(enabled=True, loss_rate=0.3))
+    eng = SweepEngine.from_configs(cfgs, data, fcc)
+    states, logs = eng.run()
+    for s, c in enumerate(cfgs):
+        srv = FederatedServer(c, data, fcc)
+        srv.run()
+        state = srv.engine.init_state(
+            mlp_init(jax.random.PRNGKey(c.seed)))
+        _, single_logs = srv.engine.run_block(state, 0, rounds)
+        ok_loss = np.array_equal(
+            logs["loss"][s],
+            np.array([r.train_loss for r in srv.history], np.float32))
+        ok_ids = np.array_equal(logs["ids"][s], single_logs["ids"])
+        ok_params = np.array_equal(
+            np.asarray(ravel_pytree(
+                jax.tree.map(lambda x: x[s], states.params))[0]),
+            np.asarray(ravel_pytree(srv.params)[0]))
+        for name, ok in (("loss", ok_loss), ("ids", ok_ids),
+                         ("params", ok_params)):
+            status = "ok" if ok else "MISMATCH"
+            print(f"traced sweep cell {s} "
+                  f"(policy={c.sel.policy}) {name}: {status}")
+            failures += 0 if ok else 1
+
+    if failures:
+        print(f"{failures} selection check(s) FAILED", file=sys.stderr)
+        return 1
+    print("selection smoke: bias reproduced, traced sweep bit-for-bit "
+          "identical")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
