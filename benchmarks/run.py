@@ -3,9 +3,11 @@
 # amortization), BENCH_uplink_fused.json (megakernel HBM-pass
 # accounting: fused = 1 read of the (C, P, F) uploads, unfused >= 3),
 # BENCH_netsim.json (on-device Gilbert-Elliott mask generation +
-# burst-grid scenarios/sec) and BENCH_selection.json (the traced
+# burst-grid scenarios/sec), BENCH_selection.json (the traced
 # selection-policy x loss-rate grid as one program + per-policy
-# participation/bias histograms).
+# participation/bias histograms) and BENCH_async.json (the traced
+# server-mode x loss-rate grid as one program + per-mode final loss
+# and slow-quartile arrival shares).
 import argparse
 import sys
 import time
@@ -23,15 +25,16 @@ def main(argv=None) -> None:
                     help="skip the (slower) federated-learning figures")
     args = ap.parse_args(argv)
 
-    from benchmarks import (beyond, engine_bench, kernel_bench,
-                            netsim_bench, paper_figures, roofline,
-                            selection_bench, sweep_bench)
+    from benchmarks import (async_bench, beyond, engine_bench,
+                            kernel_bench, netsim_bench, paper_figures,
+                            roofline, selection_bench, sweep_bench)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
         benches += list(paper_figures.ALL) + list(beyond.ALL) \
             + list(engine_bench.ALL) + list(sweep_bench.ALL) \
-            + list(netsim_bench.ALL) + list(selection_bench.ALL)
+            + list(netsim_bench.ALL) + list(selection_bench.ALL) \
+            + list(async_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

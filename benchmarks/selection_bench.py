@@ -42,7 +42,11 @@ SEED = 7
 LOSS_RATES = (0.1, 0.2, 0.3)
 TEMPERATURES = {"uniform": 1.0, "bandwidth_threshold": 0.05,
                 "gradient_norm": 0.5, "loss_aware": 0.5,
-                "netsim_state": 0.05}
+                "netsim_state": 0.05,
+                # no deadline in this grid -> stale_mem stays zero and
+                # the policy scores as uniform; it rides along so the
+                # benchmark keeps covering the FULL traced family
+                "staleness_aware": 0.5}
 
 
 def _grid_cfgs():

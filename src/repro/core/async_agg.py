@@ -1,0 +1,179 @@
+"""Asynchronous / buffered server aggregation (FedBuff-style), device
+resident.
+
+The deadline delivery model (`netsim/delivery.py`) computes when each
+upload lands; the classic sync server binarizes that against
+``deadline_s`` and drops every straggler — the brittle failure mode the
+"Robust FL in Unreliable Wireless Networks" line in PAPERS.md warns
+biases training against slow clients. This module gives the engine a
+loss-AND-latency-tolerant alternative: late uploads land in a K-slot
+arrival buffer carried through the scan (``EngineState.buf``) and are
+applied at the round they arrive, discounted by staleness
+
+    w(tau) = 1 / (1 + tau)^alpha        (``staleness_weight``)
+
+composed with TRA's debias scaling (the buffered vectors are stored
+already debias-scaled, so the discount multiplies the SAME per-client
+scale the fused uplink applies to on-time clients).
+
+Server modes (``AsyncConfig.mode``):
+
+    sync        missed deadline == whole upload dropped. Bitwise the
+                pre-PR engine (locked against the frozen v6 step).
+    semi_sync   deadline + grace window: uploads landing within
+                ``grace_s`` after the deadline still aggregate THIS
+                round, weighted by w(tau_g) with the fractional
+                staleness tau_g = (secs - deadline)/deadline; uploads
+                beyond the grace window are dropped (sync semantics).
+    async       on-time uploads aggregate this round; late uploads are
+                buffered with an integer staleness
+                tau = ceil(secs/deadline) - 1 (how many rounds late
+                they land) and merged into the aggregate of the round
+                they arrive in, discounted by w(tau).
+
+Knob split, exactly like every other engine subsystem:
+
+  * **static** (compiled program structure): ``mode`` and ``traced``
+    and ``buffer_k``. With ``traced=True`` the mode itself rides
+    ``ScenarioCtx.srv_mode`` as a one-hot, so a sync/semi_sync/async ×
+    loss-rate grid compiles to ONE vmap(scan) program.
+  * **traced** (``SWEEP_VARYING_SRV_FIELDS``, ride ``ScenarioCtx``):
+    ``staleness_alpha``, ``grace_s``.
+
+The buffer is a fixed-K sorted-by-due carry — pure array ops, no host
+round-trips. Overflow policy is deterministic: when existing entries
+plus new candidates exceed K, the K earliest-due entries win; ties
+break existing-slots-first, then candidate (cohort-slot) order — both
+guaranteed by a stable argsort over the concatenated due vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+MODES = ("sync", "semi_sync", "async")
+
+# due-time sentinel for empty buffer slots / gated-off candidates: an
+# f32 value no real round index reaches (round indices are int32), so
+# empty slots sort after every live entry and never test "ready".
+EMPTY_DUE = 3.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Server aggregation mode knobs (rides ``FLConfig.srv``)."""
+    mode: str = "sync"          # static: one of MODES
+    # traced=True compiles all three modes into one program and moves
+    # the mode choice into ScenarioCtx.srv_mode (one-hot) — required
+    # for sync-vs-async sweeps in a single compiled grid.
+    traced: bool = False
+    buffer_k: int = 8           # static: arrival-buffer slots (async)
+    # -- traced knobs (SWEEP_VARYING_SRV_FIELDS) ---------------------------
+    staleness_alpha: float = 0.5  # w(tau) = (1 + tau)^(-alpha)
+    grace_s: float = 30.0         # semi_sync window after the deadline
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        if self.buffer_k < 1:
+            raise ValueError(f"buffer_k must be >= 1, got {self.buffer_k}")
+
+
+# AsyncConfig fields a scenario may vary without changing program
+# structure (plus ``mode`` itself when ``traced=True``).
+SWEEP_VARYING_SRV_FIELDS = ("staleness_alpha", "grace_s")
+
+
+def mode_onehot(mode: str) -> np.ndarray:
+    """(len(MODES),) f32 one-hot for ``ScenarioCtx.srv_mode``."""
+    v = np.zeros(len(MODES), np.float32)
+    v[MODES.index(mode)] = 1.0
+    return v
+
+
+def staleness_weight(tau, alpha):
+    """FedBuff-style polynomial staleness discount w(tau) =
+    1/(1+tau)^alpha. tau >= 0 (clamped), alpha = 0 recovers unweighted
+    buffered averaging; finite for every finite tau."""
+    return jnp.power(1.0 + jnp.maximum(tau, 0.0), -alpha)
+
+
+class ArrivalBuffer(NamedTuple):
+    """K-slot in-flight upload buffer, a scan carry inside
+    ``EngineState``. Kept sorted by ``due`` (earliest first) so the
+    overflow policy is a stable-argsort truncation. Zero-size
+    ((0, 0)/(0,)) when the engine runs without a buffer (sync /
+    semi_sync static modes)."""
+    vec: jnp.ndarray  # (K, D_up) debias-scaled masked contributions
+    due: jnp.ndarray  # (K,) f32 absolute round index of arrival
+    w: jnp.ndarray    # (K,) denominator weight of the contribution
+    tau: jnp.ndarray  # (K,) integer staleness in rounds (as f32)
+
+
+def init_arrival_buffer(k: int, d_up: int) -> ArrivalBuffer:
+    return ArrivalBuffer(vec=jnp.zeros((k, d_up), jnp.float32),
+                         due=jnp.full((k,), EMPTY_DUE, jnp.float32),
+                         w=jnp.zeros((k,), jnp.float32),
+                         tau=jnp.zeros((k,), jnp.float32))
+
+
+def empty_arrival_buffer() -> ArrivalBuffer:
+    """Zero-size placeholder carried when the buffer is off."""
+    return ArrivalBuffer(vec=jnp.zeros((0, 0), jnp.float32),
+                         due=jnp.zeros((0,), jnp.float32),
+                         w=jnp.zeros((0,), jnp.float32),
+                         tau=jnp.zeros((0,), jnp.float32))
+
+
+def buffer_pop_ready(buf: ArrivalBuffer, t, alpha
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, ArrivalBuffer]:
+    """Drain every entry due at round ``t`` (f32 scalar).
+
+    Returns ``(num (D_up,), den (), cleared buffer)`` where
+    num = sum_ready w(tau_i) * vec_i and den = sum_ready w(tau_i) * w_i
+    — ready entries fold into the round aggregate as
+    (num_ontime + num) / (den_ontime + den). An empty buffer yields
+    exact zeros: the caller's ``den > 0`` guard makes the server step
+    the identity, never a division by zero.
+    """
+    ready = buf.due <= t
+    w_tau = staleness_weight(buf.tau, alpha) * ready.astype(jnp.float32)
+    # elementwise-multiply + reduce rather than a matvec: a dot-general
+    # may lower to a different f32 contraction order once the sweep
+    # vmaps this step, and bitwise sweep-cell == single-run equality is
+    # a tested property of the engine
+    num = (w_tau[:, None] * buf.vec).sum(axis=0)
+    den = (w_tau * buf.w).sum()
+    keep = (~ready).astype(jnp.float32)
+    cleared = ArrivalBuffer(vec=buf.vec * keep[:, None],
+                            due=jnp.where(ready, EMPTY_DUE, buf.due),
+                            w=buf.w * keep,
+                            tau=buf.tau * keep)
+    return num, den, cleared
+
+
+def buffer_insert(buf: ArrivalBuffer, vec, due, w, tau,
+                  live) -> ArrivalBuffer:
+    """Insert this round's in-flight candidates (cohort-shaped arrays,
+    gated by the ``live`` (C,) bool mask) into the K-slot buffer.
+
+    Deterministic overflow: the concatenated (existing ++ candidates)
+    entries are stable-argsorted by due time and the K earliest kept —
+    earliest-due wins; on ties, existing slots beat candidates and
+    candidates keep cohort order (``jnp.argsort`` is stable).
+    """
+    K = buf.due.shape[0]
+    live_f = live.astype(jnp.float32)
+    cand_due = jnp.where(live, due, EMPTY_DUE)
+    cand_vec = vec * live_f[:, None]
+    cand_w = w * live_f
+    cand_tau = tau * live_f
+    all_due = jnp.concatenate([buf.due, cand_due])
+    order = jnp.argsort(all_due)[:K]
+    return ArrivalBuffer(
+        vec=jnp.concatenate([buf.vec, cand_vec])[order],
+        due=all_due[order],
+        w=jnp.concatenate([buf.w, cand_w])[order],
+        tau=jnp.concatenate([buf.tau, cand_tau])[order])

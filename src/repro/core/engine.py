@@ -70,16 +70,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core import async_agg as async_mod
 from repro.core import client_updates as cu
 from repro.core import selection as sel_mod
+from repro.core.async_agg import ArrivalBuffer
 from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
+from repro.kernels.common import DENOM_EPS
 from repro.kernels.netsim_mask import ops as netsim_ops
 from repro.kernels.uplink_fused import ops as uplink_ops
 from repro.netsim.bandwidth import logbw_round_step
 from repro.netsim.channel import ge_transition_probs
-from repro.netsim.delivery import deadline_delivered, round_upload_seconds
+from repro.netsim.delivery import (MAX_LATENESS, arrival_lateness,
+                                   deadline_delivered, grace_staleness,
+                                   round_upload_seconds)
 from repro.netsim.state import NetSimState, init_net_state
 from repro.network.packets import n_packets
 from repro.network.trace import log_upload_speeds
@@ -104,6 +109,15 @@ class EngineState(NamedTuple):
     # the NEXT round's selection. (0,) when the policy needs neither.
     gnorm_mem: jnp.ndarray  # (N,) f32, or (0,)
     loss_mem: jnp.ndarray   # (N,) f32, or (0,)
+    # last observed lateness (rounds past the deadline) per client,
+    # scattered at the cohort each deadline round; read by the
+    # staleness_aware selection policy. (0,) when not needed.
+    stale_mem: jnp.ndarray  # (N,) f32, or (0,)
+    # K-slot in-flight upload buffer (core/async_agg.py): late uploads
+    # ride the scan sorted by arrival round and merge into the round
+    # they land in, staleness-discounted. Zero-size when the server
+    # mode carries no buffer (sync / semi_sync, untraced).
+    buf: ArrivalBuffer
 
 
 class ScenarioCtx(NamedTuple):
@@ -140,6 +154,11 @@ class ScenarioCtx(NamedTuple):
     sel_logbw: jnp.ndarray   # (N,) f32 static log upload speeds for
     #                          the bandwidth score, or (0,) when the
     #                          trace draw wasn't provided
+    # server aggregation mode knobs (core/async_agg.py; the mode is
+    # static, or traced as the one-hot below when cfg.srv.traced)
+    srv_mode: jnp.ndarray    # (len(async_agg.MODES),) f32 one-hot
+    stale_alpha: jnp.ndarray  # () f32 staleness discount exponent
+    grace_s: jnp.ndarray     # () f32 semi_sync grace window (seconds)
 
 
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -186,6 +205,9 @@ SWEEP_VARYING_NETSIM_FIELDS = ("burst_len", "good_loss", "bad_loss",
 # selection-policy knobs (core/selection.py); the policy NAME joins
 # them when cfg.sel.traced (it rides ScenarioCtx as a one-hot then)
 SWEEP_VARYING_SEL_FIELDS = sel_mod.SWEEP_VARYING_SEL_FIELDS
+# server-mode knobs (core/async_agg.py); the mode NAME joins them when
+# cfg.srv.traced (it rides ScenarioCtx as a one-hot then)
+SWEEP_VARYING_SRV_FIELDS = async_mod.SWEEP_VARYING_SRV_FIELDS
 
 
 def static_signature(cfg):
@@ -202,9 +224,15 @@ def static_signature(cfg):
         # the policy choice itself is traced (ScenarioCtx.sel_policy):
         # traced configs share one program across all policies
         sel = dataclasses.replace(sel, policy="uniform")
+    srv = dataclasses.replace(
+        cfg.srv, **{f: 0.0 for f in SWEEP_VARYING_SRV_FIELDS})
+    if srv.traced:
+        # the server mode itself is traced (ScenarioCtx.srv_mode):
+        # traced configs share one program across all three modes
+        srv = dataclasses.replace(srv, mode="sync")
     return dataclasses.replace(
-        cfg, tra=tra, netsim=ns, sel=sel, seed=0, selection="all",
-        eligible_ratio=1.0)
+        cfg, tra=tra, netsim=ns, sel=sel, srv=srv, seed=0,
+        selection="all", eligible_ratio=1.0)
 
 
 def _static_key(cfg):
@@ -284,6 +312,12 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
         loss_mem=jnp.zeros((N,), jnp.float32)
         if cfg.sel.traced or cfg.sel.policy == "loss_aware"
         else jnp.zeros((0,), jnp.float32),
+        stale_mem=jnp.zeros((N,), jnp.float32)
+        if cfg.sel.traced or cfg.sel.policy == "staleness_aware"
+        else jnp.zeros((0,), jnp.float32),
+        buf=async_mod.init_arrival_buffer(cfg.srv.buffer_k, up_dim)
+        if cfg.srv.traced or cfg.srv.mode == "async"
+        else async_mod.empty_arrival_buffer(),
     )
 
 
@@ -325,12 +359,37 @@ def make_round_step(cfg, cohort: int):
     policy = sel.policy
     need_gnorm = traced_sel or policy == "gradient_norm"
     need_loss = traced_sel or policy == "loss_aware"
+    need_stale = traced_sel or policy == "staleness_aware"
     if not traced_sel and policy == "netsim_state" and not use_ge:
         raise ValueError(
             "selection policy 'netsim_state' scores the Gilbert-"
             "Elliott channel state and requires "
             "netsim.channel='gilbert_elliott' (with the iid channel "
             "there is no state to prefer)")
+    if not traced_sel and policy == "staleness_aware" and not use_dl:
+        raise ValueError(
+            "selection policy 'staleness_aware' scores observed "
+            "deadline lateness and requires netsim.deadline=True "
+            "(without a deadline nothing is ever late)")
+    # server aggregation mode (core/async_agg.py): the mode (or
+    # "traced") and the buffer size are static program structure; the
+    # staleness exponent and grace window ride ScenarioCtx.
+    srv_cfg = cfg.srv
+    traced_srv = srv_cfg.traced
+    srv_mode = srv_cfg.mode
+    use_buf = traced_srv or srv_mode == "async"
+    nonsync = traced_srv or srv_mode != "sync"
+    if nonsync and not use_dl:
+        raise ValueError(
+            "server modes semi_sync/async (and srv.traced, which "
+            "includes them) schedule uploads by arrival time and "
+            "require netsim.deadline=True")
+    if use_buf and debias == "per_coord_count":
+        raise ValueError(
+            "the async arrival buffer composes with scalar-"
+            "denominator debias modes only; per_coord_count keeps "
+            "per-coordinate denominators that cannot be re-weighted "
+            "after the fact (use semi_sync, or another debias mode)")
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -370,14 +429,15 @@ def make_round_step(cfg, cohort: int):
                 explore=ctx.sel_explore,
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
-                channel=state.net.channel, n_clients=N)
+                channel=state.net.channel, stale_mem=state.stale_mem,
+                n_clients=N)
         else:
             logits = sel_mod.policy_logits(
                 policy, temperature=ctx.sel_temp,
                 explore=ctx.sel_explore,
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
-                channel=state.net.channel)
+                channel=state.net.channel, stale_mem=state.stale_mem)
         ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
                                            C)
         counts = dd.counts[ids]                              # (C,)
@@ -451,17 +511,81 @@ def make_round_step(cfg, cohort: int):
             # time passes for every client, not just the cohort: one
             # AR(1) step on all N log-bandwidth levels per round
             net_logbw = logbw_round_step(key, net_logbw, ctx.bw_rho)
+        # server mode: how arrival times fold into this round. The
+        # loss-channel-only mask is kept separate (``loss_mask``)
+        # because the async buffer stores loss-masked late uploads.
+        loss_mask = pkt_mask
+        a_c = None          # per-client arrival weight on w_agg
+        arrival = None      # logged effective arrival weight (C,)
+        lateness = None     # rounds late (staleness memory + buffer)
         if use_dl:
-            # deadline delivery: convert current bandwidth + packets
-            # sent (retransmitters push ~P/(1-r), TRA one-shots push P)
-            # into a per-client made-it bit; a miss drops the WHOLE
-            # upload (row of zeros — EF captures it when enabled).
+            # arrival times: current bandwidth + packets sent
+            # (retransmitters push ~P/(1-r), TRA one-shots push P)
             retransmit = suff.astype(bool) if tra_cfg.enabled \
                 else jnp.ones((C,), bool)
             secs = round_upload_seconds(P, F, jnp.exp(net_logbw[ids]),
                                         lr_c, retransmit)
-            pkt_mask = pkt_mask \
-                * deadline_delivered(secs, ctx.deadline_s)[:, None]
+            delivered = deadline_delivered(secs, ctx.deadline_s)
+            if need_stale or nonsync:
+                lateness = arrival_lateness(secs, ctx.deadline_s)
+            if not nonsync:
+                # sync: a miss drops the WHOLE upload (row of zeros —
+                # EF captures it when enabled); the straggler's weight
+                # still enters the denominator, biasing the round the
+                # way real federated deadlines do. Expression order is
+                # the PR-4 one, bitwise (frozen-step lock).
+                pkt_mask = pkt_mask * delivered[:, None]
+                arrival = delivered
+            else:
+                ontime = delivered
+                late = 1.0 - ontime
+                # semi_sync: within-grace stragglers land THIS round,
+                # discounted by the fractional staleness past the
+                # deadline; beyond-grace misses drop (sync semantics)
+                # but their weight leaves the denominator too.
+                within = jnp.where(
+                    ctx.deadline_s > 0.0,
+                    deadline_delivered(secs,
+                                       ctx.deadline_s + ctx.grace_s),
+                    0.0)
+                a_semi = ontime + late * within * \
+                    async_mod.staleness_weight(
+                        grace_staleness(secs, ctx.deadline_s),
+                        ctx.stale_alpha)
+                # async: on-time uploads aggregate now; late uploads
+                # buffer and land w(tau)-discounted tau rounds later.
+                # Infeasible uploads (lateness pinned at MAX_LATENESS)
+                # are never buffered, so the arrival log reports them
+                # as 0, not as the discount they would never receive.
+                feasible = (lateness < MAX_LATENESS).astype(jnp.float32)
+                w_late = async_mod.staleness_weight(lateness,
+                                                    ctx.stale_alpha)
+                a_async_log = ontime + late * feasible * w_late
+                if traced_srv:
+                    is_sync = ctx.srv_mode[0] > 0.5
+                    is_semi = ctx.srv_mode[1] > 0.5
+                    is_async = ctx.srv_mode[2] > 0.5
+                    # per-mode selection by where() keeps each cell
+                    # bitwise equal to its static-mode program (the
+                    # selected branch is the unchanged expression)
+                    pkt_mask = jnp.where(
+                        is_sync, loss_mask * delivered[:, None],
+                        jnp.where(is_semi,
+                                  loss_mask * within[:, None],
+                                  loss_mask))
+                    a_c = jnp.where(
+                        is_sync, jnp.ones((C,), jnp.float32),
+                        jnp.where(is_semi, a_semi, ontime))
+                    arrival = jnp.where(
+                        is_sync, delivered,
+                        jnp.where(is_semi, a_semi, a_async_log))
+                elif srv_mode == "semi_sync":
+                    pkt_mask = loss_mask * within[:, None]
+                    a_c = a_semi
+                    arrival = a_semi
+                else:  # async
+                    a_c = ontime
+                    arrival = a_async_log
 
         kept = None
         if debias == "per_client_rate":
@@ -482,14 +606,62 @@ def make_round_step(cfg, cohort: int):
         # gradient_norm selection scores next round's cohort by the
         # masked norms the megakernel computes in this same pass
         want_ssq = want_ssq or need_gnorm
+        # non-sync modes fold the arrival weight into the aggregation
+        # weights: zero-weight stragglers leave BOTH the numerator and
+        # the denominator (the EF update and ssq are weight-free in
+        # the kernel, so a buffered late upload is not double-counted
+        # through EF). a_c is None on the pure-sync path — no
+        # multiply, bitwise legacy.
+        w_up = w_agg if a_c is None else w_agg * a_c
 
         agg, new_ef_rows, ssq = uplink_ops.uplink_round(
-            xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
+            xp, pkt_mask, w_up, mode=debias, d_up=D_up,
             ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
             sufficient=suff, loss_rate=lr_c, mult=mult,
             want_ssq=want_ssq)
         new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
             else state.ef_mem
+
+        # async arrival buffer: pop entries due this round into the
+        # aggregate, push this round's late uploads (core/async_agg.py)
+        new_buf = state.buf
+        den_ready = None
+        if use_buf:
+            t_f = t.astype(jnp.float32)
+            num_ready, den_ready, popped = async_mod.buffer_pop_ready(
+                state.buf, t_f, ctx.stale_alpha)
+            # recombine: the kernel's aggregate is num/den with the
+            # scalar den = max(sum w_up, eps); ready buffered entries
+            # extend both sides, each staleness-discounted. When
+            # nothing is due, keep the kernel output bitwise (the
+            # recombination would round-trip num/den through a
+            # multiply).
+            den_on = w_up.sum()
+            num_on = agg * jnp.maximum(den_on, DENOM_EPS)
+            agg_buf = (num_on + num_ready) \
+                / jnp.maximum(den_on + den_ready, DENOM_EPS)
+            use_ready = den_ready > 0.0
+            if traced_srv:
+                use_ready = use_ready & is_async
+            agg = jnp.where(use_ready, agg_buf, agg)
+            # in-flight candidates: the debias-scaled loss-masked
+            # upload (the SAME per-client scale the kernel applies to
+            # on-time clients), due ``lateness`` rounds from now.
+            # Never-arriving uploads (lateness pinned at MAX_LATENESS
+            # by a degenerate deadline/bandwidth) stay out rather than
+            # occupying slots.
+            q_full = uplink_ops.debias_client_scale(
+                w_agg, mode=debias, kept=kept, sufficient=suff,
+                loss_rate=lr_c, mult=mult)
+            coord_mask = jnp.repeat(loss_mask, F, axis=1)[:, :D_up]
+            base_rows = flat + state.ef_mem[ids] if ef else flat
+            contrib = base_rows * coord_mask * q_full[:, None]
+            cand_live = (lateness > 0.0) & (lateness < MAX_LATENESS)
+            if traced_srv:
+                cand_live = cand_live & is_async
+            new_buf = async_mod.buffer_insert(
+                popped, contrib, t_f + lateness, w_agg, lateness,
+                cand_live)
 
         # server update per algorithm
         c_global_new, c_i_new, lam_new = \
@@ -514,6 +686,19 @@ def make_round_step(cfg, cohort: int):
                 + cfg.pfedme_beta * agg
         else:  # fedavg / perfedavg: weighted mean of uploaded models
             new_vec = agg
+        if nonsync:
+            # empty server step (no on-time, no grace, nothing due
+            # from the buffer): the update is the identity, never a
+            # division-by-zero and never a zeroed model (fedavg's
+            # aggregate is a mean of MODELS). Sync keeps its legacy
+            # all-stragglers behaviour — that collapse is the
+            # documented baseline the async modes fix.
+            den_tot = w_up.sum() if den_ready is None \
+                else w_up.sum() + den_ready
+            has_arrivals = den_tot > 0.0
+            if traced_srv:
+                has_arrivals = has_arrivals | is_sync
+            new_vec = jnp.where(has_arrivals, new_vec, old_vec)
         new_params = unflatten_like(new_vec, params)
 
         if algo == "afl":
@@ -536,12 +721,21 @@ def make_round_step(cfg, cohort: int):
             else state.gnorm_mem
         loss_new = state.loss_mem.at[ids].set(aux["loss0"]) \
             if need_loss else state.loss_mem
+        stale_new = state.stale_mem.at[ids].set(lateness) \
+            if need_stale and use_dl else state.stale_mem
 
         new_state = EngineState(new_params, new_ef, c_global_new,
                                 c_i_new, lam_new,
                                 NetSimState(net_channel, net_logbw),
-                                gnorm_new, loss_new)
-        return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
+                                gnorm_new, loss_new, stale_new,
+                                new_buf)
+        logs = {"loss": aux["loss0"].mean(), "ids": ids}
+        if use_dl:
+            # effective per-cohort-slot arrival weight (1 = landed on
+            # time at full weight, 0 = dropped): the participation
+            # signal the fairness analyses read.
+            logs["arrival"] = arrival
+        return new_state, logs
 
     return step
 
@@ -595,6 +789,7 @@ class RoundScanEngine:
             else np.asarray(upload_mbps, np.float32)
         ns = cfg.netsim
         sel = cfg.sel
+        srv = cfg.srv
         self.ctx = ScenarioCtx(
             base_key=jax.random.PRNGKey(cfg.seed),
             loss_rate=loss_rate,
@@ -612,7 +807,10 @@ class RoundScanEngine:
             sel_policy=jnp.asarray(sel_mod.policy_onehot(sel.policy)),
             sel_logbw=log_upload_speeds(self._upload_mbps)
             if self._upload_mbps is not None
-            else jnp.zeros((0,), jnp.float32))
+            else jnp.zeros((0,), jnp.float32),
+            srv_mode=jnp.asarray(async_mod.mode_onehot(srv.mode)),
+            stale_alpha=jnp.float32(srv.staleness_alpha),
+            grace_s=jnp.float32(srv.grace_s))
         self._step, self._single, self._block = _cached_jits(
             cfg, self.cohort)
 

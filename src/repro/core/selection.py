@@ -34,6 +34,12 @@ inputs:
                          AFL-style preference for struggling clients)
     netsim_state         s_i = 1[channel_i == GOOD] — prefer clients
                          currently in the Gilbert–Elliott good state
+    staleness_aware      s_i = -log1p(lateness_i) — prefer clients NOT
+                         recently observed late against the netsim
+                         deadline (``EngineState.stale_mem``, written
+                         by the deadline path each round); the
+                         complement of the async server's staleness
+                         discount on the selection side
 
 The knobs split exactly the way the engine splits all knobs:
 
@@ -78,7 +84,7 @@ import numpy as np
 from repro.network.trace import DEFAULT_THRESHOLD_MBPS
 
 POLICIES = ("uniform", "bandwidth_threshold", "gradient_norm",
-            "loss_aware", "netsim_state")
+            "loss_aware", "netsim_state", "staleness_aware")
 
 # temperature guard: temperature=0 means "as hard as f32 allows", not
 # a NaN program
@@ -145,7 +151,8 @@ def select_clients(key, scores, eligible, k: int) -> jnp.ndarray:
 # per-policy scores
 # ---------------------------------------------------------------------------
 def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
-                     gnorm_mem=None, loss_mem=None, channel=None):
+                     gnorm_mem=None, loss_mem=None, channel=None,
+                     stale_mem=None):
     """(N,) raw score s_i for one policy (None for ``uniform``).
 
     Inputs may be None when a policy's score source is absent (traced
@@ -174,17 +181,25 @@ def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
         if channel is None or channel.shape[-1] == 0:
             return None
         return 1.0 - channel.astype(jnp.float32)
+    if policy == "staleness_aware":
+        if stale_mem is None or stale_mem.shape[-1] == 0:
+            return None
+        # negative log-lateness: never-late (mem 0) clients score 0,
+        # chronically late ones are suppressed smoothly (log1p keeps
+        # MAX_LATENESS sentinels finite, ~-14, not -inf starvation)
+        return -jnp.log1p(stale_mem)
     raise ValueError(f"unknown selection policy {policy!r}")
 
 
 def policy_logits(policy: str, *, temperature, explore,
                   threshold_mbps=None, logbw=None, gnorm_mem=None,
-                  loss_mem=None, channel=None):
+                  loss_mem=None, channel=None, stale_mem=None):
     """Effective Gumbel-top-k logits for one static policy
     (None ⇔ uniform sampling, the legacy-bitwise path)."""
     s = raw_policy_score(policy, threshold_mbps=threshold_mbps,
                          logbw=logbw, gnorm_mem=gnorm_mem,
-                         loss_mem=loss_mem, channel=channel)
+                         loss_mem=loss_mem, channel=channel,
+                         stale_mem=stale_mem)
     if s is None:
         return None
     return (1.0 - explore) * s / jnp.maximum(temperature, TEMP_EPS)
@@ -192,7 +207,8 @@ def policy_logits(policy: str, *, temperature, explore,
 
 def traced_policy_logits(sel_policy, *, temperature, explore,
                          threshold_mbps, logbw=None, gnorm_mem=None,
-                         loss_mem=None, channel=None, n_clients=None):
+                         loss_mem=None, channel=None, stale_mem=None,
+                         n_clients=None):
     """Logits with the POLICY ITSELF traced: every policy's raw score
     is computed and contracted with the (len(POLICIES),) one-hot
     ``sel_policy`` — so scenarios of one vmapped program can each run a
@@ -203,7 +219,8 @@ def traced_policy_logits(sel_policy, *, temperature, explore,
     for p in POLICIES:
         s = raw_policy_score(p, threshold_mbps=threshold_mbps,
                              logbw=logbw, gnorm_mem=gnorm_mem,
-                             loss_mem=loss_mem, channel=channel)
+                             loss_mem=loss_mem, channel=channel,
+                             stale_mem=stale_mem)
         rows.append(jnp.zeros((n_clients,), jnp.float32)
                     if s is None else s)
     raw = jnp.einsum("p,pn->n", sel_policy, jnp.stack(rows))

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import client_updates as cu
 from repro.core import tra as tra_mod
+from repro.core.async_agg import AsyncConfig
 from repro.core.engine import RoundScanEngine
 from repro.core.selection import SelectionConfig
 from repro.core.fairness import FairnessReport, fairness_report
@@ -65,6 +66,12 @@ class FLConfig:
     # loss, AR(1) time-varying bandwidth, deadline delivery. The default
     # (channel="iid", models off) is the pre-netsim engine bit-for-bit.
     netsim: NetSimConfig = dataclasses.field(default_factory=NetSimConfig)
+    # server aggregation mode (core/async_agg.py): sync (default,
+    # bitwise the pre-async engine) | semi_sync (deadline + staleness-
+    # discounted grace window) | async (K-slot arrival buffer; late
+    # uploads land staleness-discounted in the round they arrive).
+    # Requires netsim.deadline=True for the non-sync modes.
+    srv: AsyncConfig = dataclasses.field(default_factory=AsyncConfig)
     # algorithm hyper-parameters (paper / source-code defaults)
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps

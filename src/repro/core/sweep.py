@@ -45,11 +45,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import async_agg as async_mod
 from repro.core import selection as sel_mod
 from repro.core import tra as tra_mod
+from repro.core.async_agg import AsyncConfig
 from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
                                SWEEP_VARYING_NETSIM_FIELDS,
                                SWEEP_VARYING_SEL_FIELDS,
+                               SWEEP_VARYING_SRV_FIELDS,
                                SWEEP_VARYING_TRA_FIELDS, EngineState,
                                ScenarioCtx, _static_key,
                                init_engine_state, make_round_step,
@@ -87,6 +90,11 @@ class Scenario:
     # only when the sweep config is traced (cfg.sel.traced — the
     # one-hot rides ScenarioCtx.sel_policy)
     sel: Optional[SelectionConfig] = None
+    # server-mode scenario axis (None -> cfg.srv): staleness_alpha /
+    # grace_s may vary per cell; the mode NAME may vary only when the
+    # sweep config is traced (cfg.srv.traced — the one-hot rides
+    # ScenarioCtx.srv_mode); traced flag and buffer_k must agree
+    srv: Optional[AsyncConfig] = None
     # per-client trace draws, needed when tra.per_client_loss or a
     # netsim bandwidth/deadline model is on
     packet_loss: Optional[np.ndarray] = None   # (N,) drop rates
@@ -109,7 +117,7 @@ def scenario_from_config(cfg, data: FederatedDataset,
         threshold_mbps=cfg.tra.threshold_mbps))
     return Scenario(seed=cfg.seed, loss_rate=cfg.tra.loss_rate,
                     sufficient=sufficient, eligible=eligible, data=data,
-                    netsim=cfg.netsim, sel=cfg.sel,
+                    netsim=cfg.netsim, sel=cfg.sel, srv=cfg.srv,
                     packet_loss=nets.packet_loss,
                     upload_mbps=nets.upload_mbps)
 
@@ -199,6 +207,21 @@ class SweepEngine:
                     f"policy/traced mode than the sweep config; only "
                     f"{SWEEP_VARYING_SEL_FIELDS} may vary per cell "
                     f"(the policy itself only with sel.traced=True)")
+        # per-scenario server-mode knobs (static mode/traced/buffer_k
+        # must agree — they pick the compiled program; with traced=True
+        # the mode itself becomes the per-scenario one-hot)
+        srvs = self._srvs = [s.srv if s.srv is not None else cfg.srv
+                             for s in self.scenarios]
+        for i, sv in enumerate(srvs):
+            ok = sv.traced == cfg.srv.traced \
+                and sv.buffer_k == cfg.srv.buffer_k \
+                and (cfg.srv.traced or sv.mode == cfg.srv.mode)
+            if not ok:
+                raise ValueError(
+                    f"scenario {i} selects a different server mode / "
+                    f"traced flag / buffer size than the sweep config; "
+                    f"only {SWEEP_VARYING_SRV_FIELDS} may vary per "
+                    f"cell (the mode itself only with srv.traced=True)")
         need_bw_score = cfg.sel.traced \
             or cfg.sel.policy == "bandwidth_threshold"
         if need_bw_score \
@@ -239,7 +262,13 @@ class SweepEngine:
                                     jnp.float32),
             sel_policy=jnp.asarray(np.stack(
                 [sel_mod.policy_onehot(sc.policy) for sc in sels])),
-            sel_logbw=sel_logbw)
+            sel_logbw=sel_logbw,
+            srv_mode=jnp.asarray(np.stack(
+                [async_mod.mode_onehot(sv.mode) for sv in srvs])),
+            stale_alpha=jnp.asarray(
+                [sv.staleness_alpha for sv in srvs], jnp.float32),
+            grace_s=jnp.asarray([sv.grace_s for sv in srvs],
+                                jnp.float32))
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
         if cache_key not in _SWEEP_CACHE:
             step = make_round_step(cfg, self.cohort)
@@ -250,7 +279,8 @@ class SweepEngine:
                                    bw_rho=0, deadline_s=0,
                                    sel_threshold=0, sel_temp=0,
                                    sel_explore=0, sel_policy=0,
-                                   sel_logbw=0)
+                                   sel_logbw=0, srv_mode=0,
+                                   stale_alpha=0, grace_s=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
             _SWEEP_CACHE[cache_key] = (step, jax.jit(
                 lambda ctx, state, ts: jax.lax.scan(
@@ -279,9 +309,11 @@ class SweepEngine:
                     f"config {i} differs from config 0 in a static "
                     f"field; only {SWEEP_VARYING_FIELDS}, tra."
                     f"{SWEEP_VARYING_TRA_FIELDS}, netsim."
-                    f"{SWEEP_VARYING_NETSIM_FIELDS} and sel."
-                    f"{SWEEP_VARYING_SEL_FIELDS} (plus sel.policy "
-                    f"under sel.traced=True) may vary in one sweep")
+                    f"{SWEEP_VARYING_NETSIM_FIELDS}, sel."
+                    f"{SWEEP_VARYING_SEL_FIELDS} and srv."
+                    f"{SWEEP_VARYING_SRV_FIELDS} (plus sel.policy / "
+                    f"srv.mode under their traced=True) may vary in "
+                    f"one sweep")
         if isinstance(datas, FederatedDataset):
             datas = [datas] * S
         if len(datas) != S:
@@ -304,7 +336,7 @@ class SweepEngine:
                          sufficient=tra_mod.sufficiency_report(
                              n, c.tra.threshold_mbps),
                          eligible=eligible[i], data=d,
-                         netsim=c.netsim, sel=c.sel,
+                         netsim=c.netsim, sel=c.sel, srv=c.srv,
                          packet_loss=n.packet_loss,
                          upload_mbps=n.upload_mbps)
                 for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]

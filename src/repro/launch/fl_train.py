@@ -131,6 +131,75 @@ def make_fl_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     return fl_step, opt
 
 
+def make_fl_contrib_step(cfg: ModelConfig, tcfg: TrainConfig,
+                         tra: TRAConfig, n_clients: int):
+    """The async-server decomposition of ``make_fl_train_step``:
+
+    ``contrib_step(params, batch, sufficient, key)`` returns the
+    per-client debias-SCALED masked gradient contributions (pytree with
+    leading client axis C, f32) plus per-client losses — i.e. the
+    numerator terms of the aggregate, BEFORE the cross-client mean. The
+    host decides which contributions land this round (on-time), which
+    wait in the arrival buffer (late, ``--server-mode async``) and with
+    what staleness weight, then calls
+    ``apply_step(params, opt_state, num, den)`` with the recombined
+    numerator/denominator. Splitting numerator from denominator is what
+    lets buffered arrivals merge rounds later without re-running the
+    clients. Only ``group_rate``/``none`` debias is supported: the
+    per-coord-count denominator is a full gradient-shaped pytree and is
+    refused (same restriction as the engine's buffer path).
+    """
+    if tra.debias == "per_coord_count":
+        raise ValueError("per_coord_count debias has a per-coordinate "
+                         "denominator and cannot ride the scalar-weight "
+                         "arrival buffer; use group_rate or none")
+    opt = make_optimizer(tcfg.optimizer, tcfg.lr, momentum=tcfg.momentum,
+                         weight_decay=tcfg.weight_decay)
+    remat = tcfg.remat != "none"
+
+    def contrib_step(params, batch, sufficient, key):
+        rate = tra.loss_rate
+
+        def client_loss(p, b):
+            loss, _ = tf.forward(cfg, p, b, remat=remat)
+            return loss
+
+        losses, grads = jax.vmap(
+            jax.value_and_grad(client_loss), in_axes=(None, 0))(params, batch)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(key, len(leaves) * n_clients).reshape(
+            len(leaves), n_clients, 2)
+        out = []
+        for li, g in enumerate(leaves):
+            lf_shape = g.shape[1:]
+            masks = jax.vmap(
+                lambda kc, s: _leaf_packet_mask(kc, lf_shape, rate,
+                                                tra.packet_floats),
+                in_axes=(0, None))(keys[li], 0)
+            suff = sufficient.reshape((n_clients,) + (1,) * len(lf_shape))
+            masks = jnp.maximum(masks, suff.astype(masks.dtype))
+            gm = (g * masks.astype(g.dtype)).astype(jnp.float32)
+            if tra.debias == "group_rate":
+                scale = jnp.where(suff.astype(bool), 1.0,
+                                  1.0 / jnp.maximum(1.0 - rate, 1e-6))
+                gm = gm * scale
+            out.append(gm)
+        return jax.tree_util.tree_unflatten(treedef, out), losses
+
+    def apply_step(params, opt_state, num, den):
+        agg_grads = jax.tree.map(
+            lambda n, p: (n / den).astype(p.dtype), num, params)
+        if tcfg.grad_clip > 0:
+            agg_grads, gnorm = clip_by_global_norm(agg_grads, tcfg.grad_clip)
+        else:
+            gnorm = jnp.float32(0.0)
+        updates, opt_state = opt.update(agg_grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, gnorm
+
+    return contrib_step, apply_step, opt
+
+
 def make_fl_sweep_step(cfg: ModelConfig, tcfg: TrainConfig,
                        tra: TRAConfig, n_clients: int):
     """Scenario-vectorized FL step: vmap ``fl_step`` over a leading
@@ -181,6 +250,91 @@ def _run_sweep(cfg, tcfg, tra, args, rates):
                        for r, l in zip(rates, losses))
         print(f"round {i:4d} {per} ({time.time()-t0:.2f}s)", flush=True)
         assert np.all(np.isfinite(losses))
+    return 0
+
+
+def _run_async(cfg, tcfg, tra, args):
+    """Host-driven ``--server-mode semi_sync|async`` route: the
+    transformer-scale mirror of the engine's arrival buffer. Each round
+    every client computes its contribution; the netsim delivery model
+    (per-client FCC-trace bandwidth, TRA retransmission inflation)
+    decides who beats ``--deadline-s``. Late contributions are buffered
+    host-side (``--buffer-k`` earliest-due entries win, deterministic)
+    and merged into the round they arrive in with the staleness
+    discount w(tau) = (1+tau)^(-alpha); semi_sync instead folds
+    within-grace stragglers into the CURRENT round with the fractional
+    discount and drops the rest. A round with no arrivals at all leaves
+    params untouched (identity, no 0/0)."""
+    from repro.core.async_agg import staleness_weight
+    from repro.netsim.delivery import (MAX_LATENESS, arrival_lateness,
+                                       grace_staleness,
+                                       round_upload_seconds)
+    from repro.network.trace import sample_networks
+
+    C = args.clients
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    n_pkts = -(-n_params // tra.packet_floats)
+    contrib_step, apply_step, opt = make_fl_contrib_step(cfg, tcfg, tra, C)
+    opt_state = opt.init(params)
+    contrib_step = jax.jit(contrib_step)
+    apply_step = jax.jit(apply_step)
+    sufficient = jnp.asarray(
+        [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
+    mbps = sample_networks(np.random.default_rng(0), C).upload_mbps
+    secs = np.asarray(round_upload_seconds(
+        n_pkts, tra.packet_floats, jnp.asarray(mbps),
+        jnp.float32(args.loss_rate),
+        jnp.asarray(sufficient, bool)))                  # (C,) static here
+    lateness = np.asarray(arrival_lateness(
+        jnp.asarray(secs), jnp.float32(args.deadline_s)))
+    alpha = args.staleness_alpha
+    buffer = []                  # [(due, w_tau, contrib pytree)] host-side
+    rng = np.random.default_rng(0)
+    for i in range(args.steps):
+        batches = [synth_batch(cfg, args.batch, args.seq, rng)
+                   for _ in range(C)]
+        batch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+        t0 = time.time()
+        contribs, losses = contrib_step(params, batch, sufficient,
+                                        jax.random.PRNGKey(1000 + i))
+        if args.server_mode == "semi_sync":
+            within = secs <= args.deadline_s + args.grace_s
+            gtau = np.asarray(grace_staleness(
+                jnp.asarray(secs), jnp.float32(args.deadline_s)))
+            w_c = np.where(lateness == 0, 1.0,
+                           np.where(within,
+                                    np.asarray(staleness_weight(
+                                        jnp.asarray(gtau),
+                                        jnp.float32(alpha))), 0.0))
+        else:                                            # async
+            w_c = (lateness == 0).astype(np.float32)
+        num = jax.tree.map(
+            lambda x: jnp.einsum("c,c...->...", jnp.asarray(
+                w_c, jnp.float32), x), contribs)
+        den = float(w_c.sum())
+        ready = [e for e in buffer if e[0] <= i]
+        buffer = [e for e in buffer if e[0] > i]
+        for due, w_tau, con in ready:
+            num = jax.tree.map(lambda n, c: n + w_tau * c, num, con)
+            den += w_tau
+        if args.server_mode == "async":
+            for c in range(C):
+                if 0 < lateness[c] < MAX_LATENESS:
+                    w_tau = float(staleness_weight(
+                        jnp.float32(lateness[c]), jnp.float32(alpha)))
+                    buffer.append((i + int(lateness[c]), w_tau,
+                                   jax.tree.map(lambda x: x[c], contribs)))
+            buffer = sorted(buffer, key=lambda e: e[0])[:args.buffer_k]
+        if den > 0:
+            params, opt_state, _ = apply_step(params, opt_state, num,
+                                              jnp.float32(den))
+        print(f"round {i:4d} loss={float(losses.mean()):8.4f} "
+              f"ontime={int((lateness == 0).sum())}/{C} "
+              f"buffered={len(ready)}->merged den={den:.3f} "
+              f"({time.time()-t0:.2f}s)", flush=True)
+        assert np.isfinite(float(losses.mean()))
     return 0
 
 
@@ -243,6 +397,22 @@ def main(argv=None):
                          "(core/selection.py; netsim_state needs the "
                          "engine's channel state and is engine-only)")
     ap.add_argument("--selection-temperature", type=float, default=1.0)
+    ap.add_argument("--server-mode", default="sync",
+                    choices=("sync", "semi_sync", "async"),
+                    help="sync drops deadline stragglers (the legacy "
+                         "path, bitwise unchanged); semi_sync folds "
+                         "within-grace stragglers into the round with a "
+                         "staleness discount; async buffers them "
+                         "host-side and merges them at arrival "
+                         "(core/async_agg semantics)")
+    ap.add_argument("--deadline-s", type=float, default=0.5,
+                    help="upload deadline for the non-sync server modes")
+    ap.add_argument("--grace-s", type=float, default=0.5,
+                    help="semi_sync window after the deadline")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="w(tau) = (1+tau)^(-alpha) staleness discount")
+    ap.add_argument("--buffer-k", type=int, default=8,
+                    help="async arrival-buffer slots (earliest-due win)")
     ap.add_argument("--sweep-loss-rates", default=None,
                     help="comma-separated TRA loss rates, e.g. "
                          "'0.0,0.1,0.3': train all scenarios at once as "
@@ -258,6 +428,18 @@ def main(argv=None):
         cfg = cfg.reduced()
     tcfg = TrainConfig(lr=args.lr)
     tra = TRAConfig(loss_rate=args.loss_rate, debias=args.debias)
+    if args.server_mode != "sync":
+        if args.sweep_loss_rates or args.cohort is not None:
+            ap.error("--server-mode semi_sync/async is a single-scenario "
+                     "full-participation route (the arrival buffer is "
+                     "host-side per client)")
+        if args.deadline_s <= 0:
+            ap.error("--server-mode semi_sync/async needs --deadline-s > 0")
+        if tra.debias == "per_coord_count":
+            ap.error("--server-mode semi_sync/async needs --debias "
+                     "group_rate or none (per-coord denominators cannot "
+                     "ride the scalar-weight arrival buffer)")
+        return _run_async(cfg, tcfg, tra, args)
     if args.sweep_loss_rates:
         if args.cohort is not None:
             ap.error("--cohort is not supported on the sweep route "

@@ -8,13 +8,16 @@ from repro.netsim.channel import (CH_INIT_FOLD, ge_transition_probs,
                                   sample_ge_mask_numpy,
                                   stationary_bad_frac)
 from repro.netsim.config import CHANNELS, NetSimConfig
-from repro.netsim.delivery import deadline_delivered, round_upload_seconds
+from repro.netsim.delivery import (INFEASIBLE_SECS, MAX_LATENESS,
+                                   arrival_lateness, deadline_delivered,
+                                   grace_staleness, round_upload_seconds)
 from repro.netsim.state import NetSimState, init_net_state
 
 __all__ = [
-    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "NetSimConfig", "NetSimState",
-    "deadline_delivered", "ge_transition_probs", "init_channel_state",
-    "init_logbw", "init_net_state", "logbw_round_step",
-    "round_upload_seconds", "sample_ge_mask_numpy",
+    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "INFEASIBLE_SECS",
+    "MAX_LATENESS", "NetSimConfig", "NetSimState", "arrival_lateness",
+    "deadline_delivered", "ge_transition_probs", "grace_staleness",
+    "init_channel_state", "init_logbw", "init_net_state",
+    "logbw_round_step", "round_upload_seconds", "sample_ge_mask_numpy",
     "stationary_bad_frac",
 ]

@@ -4,22 +4,33 @@ The paper's motivation for TRA is wall-clock: a retransmitting client
 must push ~P/(1-r) packets through its uplink before the server's
 round deadline, a TRA client pushes exactly P. This module converts a
 cohort's current bandwidth (from ``NetSimState.logbw``) and its
-transmission policy into a per-client delivered/missed bit for the
-round:
+transmission policy into a per-client arrival time for the round:
 
     secs_c = P * packet_bytes * 8 * sends_c / (mbps_c * 1e6)
     sends_c = 1/(1 - r_c)  if client c retransmits (sufficient, or
                            TRA disabled — the reliable-upload baseline)
             = 1            if client c throws right away
-    delivered_c = secs_c <= deadline_s
+    delivered_c = secs_c <= deadline_s  and  deadline_s > 0
 
-A missed deadline drops the WHOLE upload (the packet mask row goes to
-zero): the straggler simply isn't there when the server aggregates.
-Error feedback, when enabled, then captures the entire update in the
-client's EF memory — no special casing needed. Note the aggregation
-weights still enter the denominator, so stragglers bias the round
-exactly the way real federated deadlines do; that interaction is the
-point of making the deadline a scenario axis.
+Under the sync server a missed deadline drops the WHOLE upload (the
+packet mask row goes to zero): the straggler simply isn't there when
+the server aggregates. Error feedback, when enabled, then captures the
+entire update in the client's EF memory — no special casing needed.
+Note the aggregation weights still enter the denominator, so
+stragglers bias the round exactly the way real federated deadlines do;
+that interaction is the point of making the deadline a scenario axis.
+The async/semi_sync server modes (`core/async_agg.py`) instead convert
+the arrival time into a staleness (``arrival_lateness`` /
+``grace_staleness``) and keep the late upload.
+
+Degenerate-input contract (property-tested in tests/test_async.py):
+every function here returns FINITE values and a deterministic
+not-delivered bit for deadline_s <= 0 / nonfinite, zero / negative /
+nonfinite bandwidth, and loss_rate -> 1 retransmit inflation — NaN/inf
+never leak into the packet mask or the arrival buffer. On well-formed
+inputs the hardened expressions are bitwise the original ones (the
+guards are ``where``-selects of the unchanged arithmetic), which the
+frozen-step sync lock asserts end to end.
 """
 from __future__ import annotations
 
@@ -29,20 +40,61 @@ from repro.kernels.common import RATE_EPS
 
 PACKET_BYTES_PER_FLOAT = 4  # f32 payload coordinates
 
+# finite arrival-time sentinel for infeasible uploads (no/zero/NaN
+# bandwidth): later than any sane deadline, still f32-finite so
+# downstream arithmetic (lateness, staleness weights) stays finite.
+INFEASIBLE_SECS = 1.0e30
+# cap on rounds-late: keeps ceil(secs/deadline) finite in f32 even for
+# INFEASIBLE_SECS over a tiny deadline.
+MAX_LATENESS = 1.0e6
+
 
 def round_upload_seconds(n_pkts: int, packet_floats: int, mbps,
                          loss_rate, retransmit):
     """Per-client seconds to complete this round's upload.
 
     mbps / loss_rate / retransmit are (C,) (loss_rate may be a scalar);
-    the retransmit inflation is the geometric expectation 1/(1-r)."""
+    the retransmit inflation is the geometric expectation 1/(1-r).
+    Degenerate inputs (mbps <= 0 or nonfinite, loss_rate outside
+    [0, 1] or NaN) yield the finite ``INFEASIBLE_SECS`` sentinel
+    instead of NaN/inf."""
     bits = float(n_pkts * packet_floats * PACKET_BYTES_PER_FLOAT * 8)
+    r = jnp.clip(loss_rate, 0.0, 1.0)
     sends = jnp.where(retransmit,
-                      1.0 / jnp.maximum(1.0 - loss_rate, RATE_EPS),
+                      1.0 / jnp.maximum(1.0 - r, RATE_EPS),
                       1.0)
-    return bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
+    secs = bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
+    ok = jnp.isfinite(secs) & (secs > 0.0) \
+        & jnp.isfinite(mbps) & (mbps > 0.0)
+    return jnp.where(ok, secs, INFEASIBLE_SECS)
 
 
 def deadline_delivered(secs, deadline_s):
-    """(C,) f32 1 = made the deadline, 0 = whole upload dropped."""
-    return (secs <= deadline_s).astype(jnp.float32)
+    """(C,) f32 1 = made the deadline, 0 = missed. A degenerate
+    deadline (<= 0 or NaN) deterministically delivers nothing."""
+    return ((secs <= deadline_s) & (deadline_s > 0.0)) \
+        .astype(jnp.float32)
+
+
+def arrival_lateness(secs, deadline_s):
+    """(C,) f32 whole server rounds late: 0 = on time,
+    tau = ceil(secs/deadline) - 1 otherwise — the async buffer's
+    integer staleness AND its due-time offset (the upload lands tau
+    rounds after the one it was produced in). Clamped to
+    [0, MAX_LATENESS]; degenerate deadlines (<= 0, nonfinite) pin to
+    MAX_LATENESS (never delivered within any buffered horizon, never
+    NaN)."""
+    dl_ok = (deadline_s > 0.0) & jnp.isfinite(deadline_s)
+    dl = jnp.where(dl_ok, deadline_s, 1.0)
+    late = jnp.clip(jnp.ceil(secs / dl) - 1.0, 0.0, MAX_LATENESS)
+    return jnp.where(dl_ok & jnp.isfinite(late), late, MAX_LATENESS)
+
+
+def grace_staleness(secs, deadline_s):
+    """(C,) f32 fractional staleness (secs - deadline)/deadline for the
+    semi_sync grace-window discount; >= 0, finite, and MAX_LATENESS for
+    degenerate deadlines."""
+    dl_ok = (deadline_s > 0.0) & jnp.isfinite(deadline_s)
+    dl = jnp.where(dl_ok, deadline_s, 1.0)
+    tau = jnp.clip((secs - dl) / dl, 0.0, MAX_LATENESS)
+    return jnp.where(dl_ok & jnp.isfinite(tau), tau, MAX_LATENESS)

@@ -1,0 +1,243 @@
+"""Frozen copy of the PRE-async round step (engine.py as of PR 6).
+
+This is the bit-identity oracle for the ``server_mode="sync"`` default:
+the async-aggregation PR threads a new arrival buffer, staleness
+memory and server-mode fields through the engine, and
+tests/test_async.py asserts that with ``srv=AsyncConfig()`` (sync,
+untraced) the refactored step still computes EXACTLY this math,
+bitwise, for every algorithm combination — including the deadline and
+Gilbert–Elliott paths the async modes build on. The netsim delivery
+expressions are INLINED here as they stood before this PR's hardening
+(``_legacy_round_upload_seconds`` / ``_legacy_deadline_delivered``),
+so the lock also asserts the hardened `netsim/delivery.py` stays
+bitwise on well-formed inputs. Deliberately verbatim (only
+``EngineState(...)`` construction swapped for ``state._replace(...)``
+so the frozen step tolerates fields added to the carry later) — do not
+"clean up" or share code with the live engine; divergence is the point
+of the lock.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import client_updates as cu
+from repro.core import selection as sel_mod
+from repro.core.mlp import mlp_weighted_loss
+from repro.core.tra import flatten_clients, unflatten_like
+from repro.kernels.common import RATE_EPS
+from repro.kernels.netsim_mask import ops as netsim_ops
+from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.netsim.bandwidth import logbw_round_step
+from repro.netsim.channel import ge_transition_probs
+from repro.netsim.delivery import PACKET_BYTES_PER_FLOAT
+from repro.netsim.state import NetSimState
+from repro.network.packets import n_packets
+
+
+def _legacy_round_upload_seconds(n_pkts, packet_floats, mbps,
+                                 loss_rate, retransmit):
+    """netsim/delivery.round_upload_seconds as of PR 6 (pre-hardening)."""
+    bits = float(n_pkts * packet_floats * PACKET_BYTES_PER_FLOAT * 8)
+    sends = jnp.where(retransmit,
+                      1.0 / jnp.maximum(1.0 - loss_rate, RATE_EPS),
+                      1.0)
+    return bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
+
+
+def _legacy_deadline_delivered(secs, deadline_s):
+    """netsim/delivery.deadline_delivered as of PR 6 (pre-hardening)."""
+    return (secs <= deadline_s).astype(jnp.float32)
+
+
+def make_legacy_v6_round_step(cfg, cohort: int):
+    """The pre-async ``step(ctx, state, t)``: the deadline binarizes
+    arrival times into whole-upload drops, no arrival buffer, no
+    staleness memory."""
+    tra_cfg = cfg.tra
+    hyper = cfg.hyper()
+    algo = cfg.algo
+    ef = cfg.error_feedback
+    C = cohort
+    steps, bs = cfg.local_steps, cfg.batch_size
+    F = tra_cfg.packet_floats
+    debias = tra_cfg.debias
+    local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+    ns = cfg.netsim
+    use_ge = ns.channel == "gilbert_elliott"
+    use_bw = ns.bw_ar1
+    use_dl = ns.deadline
+    sel = cfg.sel
+    traced_sel = sel.traced
+    policy = sel.policy
+    need_gnorm = traced_sel or policy == "gradient_norm"
+    need_loss = traced_sel or policy == "loss_aware"
+
+    def step(ctx, state, t):
+        dd = ctx.data
+        N = dd.counts.shape[0]
+        afl_len = min(64, dd.train_x.shape[1])
+        params = state.params
+        old_vec, _ = ravel_pytree(params)
+        D_model = old_vec.shape[0]
+        D_up = 2 * D_model if algo == "scaffold" else D_model
+        P = n_packets(D_up, F)
+        n_batch = C * steps * bs
+        n_tra = 2 * C * P if use_ge else C * P
+        key = jax.random.fold_in(ctx.base_key, t)
+        u_all = jax.random.uniform(key, (N + n_batch + n_tra,),
+                                   minval=1e-12, maxval=1.0)
+        u_sel = u_all[:N]
+        u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
+        u_tra = u_all[N + n_batch:N + n_batch + C * P].reshape(C, P)
+        u_emit = u_all[N + n_batch + C * P:].reshape(C, P) \
+            if use_ge else None
+
+        sel_bw = state.net.logbw if use_bw else ctx.sel_logbw
+        if traced_sel:
+            logits = sel_mod.traced_policy_logits(
+                ctx.sel_policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel, n_clients=N)
+        else:
+            logits = sel_mod.policy_logits(
+                policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel)
+        ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
+                                           C)
+        counts = dd.counts[ids]                              # (C,)
+        idx = jnp.minimum((u_idx * counts[:, None, None]
+                           ).astype(jnp.int32), counts[:, None, None] - 1)
+        cid = ids[:, None, None]
+        X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
+        Y = dd.train_y[cid, idx]                 # (C, steps, bs)
+        w = counts.astype(jnp.float32)
+        weights = w / w.sum()
+        suff = ctx.sufficient[ids]
+
+        if algo == "scaffold":
+            c_global = unflatten_like(state.c_global, params)
+
+            def loc(p, x, y, ci_vec):
+                ci = unflatten_like(ci_vec, params)
+                return cu.scaffold_local(p, x, y, c_global, ci, hyper)
+
+            uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                params, X, Y, state.c_i[ids])
+            dw = flatten_clients(uploads["dw"], C)
+            dc = flatten_clients(uploads["dc"], C)
+            flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
+        else:
+            uploads, aux = jax.vmap(
+                lambda p, x, y: local(p, x, y, hyper),
+                in_axes=(None, 0, 0))(params, X, Y)
+            flat = flatten_clients(uploads, C)               # (C, D)
+
+        pad = P * F - D_up
+        xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
+        lr_c = ctx.loss_rate if ctx.loss_rate.ndim == 0 \
+            else ctx.loss_rate[ids]
+        lr_col = lr_c if lr_c.ndim == 0 else lr_c[:, None]
+        net_channel, net_logbw = state.net.channel, state.net.logbw
+        if use_ge:
+            p_gb, p_bg = ge_transition_probs(
+                lr_c, ctx.burst_len, ctx.good_loss, ctx.bad_loss)
+            ge_mask, s_fin = netsim_ops.ge_packet_mask(
+                u_tra, u_emit, net_channel[ids], p_gb, p_bg,
+                ctx.good_loss, ctx.bad_loss)
+            net_channel = net_channel.at[ids].set(s_fin)
+            pkt_mask = jnp.where(suff.astype(bool)[:, None], 1.0,
+                                 ge_mask)
+        elif tra_cfg.enabled:
+            lost = (u_tra < lr_col) \
+                & ~suff.astype(bool)[:, None]
+            pkt_mask = 1.0 - lost.astype(jnp.float32)
+        else:
+            pkt_mask = jnp.ones((C, P))
+
+        if use_bw:
+            net_logbw = logbw_round_step(key, net_logbw, ctx.bw_rho)
+        if use_dl:
+            retransmit = suff.astype(bool) if tra_cfg.enabled \
+                else jnp.ones((C,), bool)
+            secs = _legacy_round_upload_seconds(
+                P, F, jnp.exp(net_logbw[ids]), lr_c, retransmit)
+            pkt_mask = pkt_mask \
+                * _legacy_deadline_delivered(secs, ctx.deadline_s)[:, None]
+
+        kept = None
+        if debias == "per_client_rate":
+            pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
+            kept = (pkt_mask @ pcnt) / D_up
+
+        if algo == "qfedavg":
+            eps = 1e-10
+            fq = jnp.power(aux["loss0"] + eps, cfg.q)
+            w_agg, mult, want_ssq = jnp.ones(C), fq, True
+        elif algo == "afl":
+            w_agg, mult, want_ssq = state.lam[ids], None, False
+        else:
+            w_agg, mult, want_ssq = weights, None, False
+        want_ssq = want_ssq or need_gnorm
+
+        agg, new_ef_rows, ssq = uplink_ops.uplink_round(
+            xp, pkt_mask, w_agg, mode=debias, d_up=D_up,
+            ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
+            sufficient=suff, loss_rate=lr_c, mult=mult,
+            want_ssq=want_ssq)
+        new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
+            else state.ef_mem
+
+        c_global_new, c_i_new, lam_new = \
+            state.c_global, state.c_i, state.lam
+        if algo == "scaffold":
+            D = dw.shape[1]
+            dw_agg, dc_agg = agg[:D], agg[D:]
+            new_vec = old_vec + dw_agg
+            c_global_new = state.c_global + (C / N) * dc_agg
+            c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
+        elif algo == "qfedavg":
+            h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
+                * ssq + cfg.lipschitz * fq
+            agg_sum = agg * C
+            new_vec = old_vec - agg_sum / jnp.maximum(h.sum(), 1e-8)
+        elif algo == "afl":
+            new_vec = agg
+        elif algo == "pfedme":
+            new_vec = (1 - cfg.pfedme_beta) * old_vec \
+                + cfg.pfedme_beta * agg
+        else:  # fedavg / perfedavg
+            new_vec = agg
+        new_params = unflatten_like(new_vec, params)
+
+        if algo == "afl":
+            Xe = dd.train_x[ids, :afl_len]
+            Ye = dd.train_y[ids, :afl_len]
+            msk = (jnp.arange(afl_len)[None, :]
+                   < counts[:, None]).astype(jnp.float32)
+            losses = jax.vmap(mlp_weighted_loss,
+                              in_axes=(None, 0, 0, 0))(
+                new_params, Xe, Ye, msk)
+            lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
+            lam = jnp.maximum(lam, 0.0)
+            lam_new = lam / lam.sum()
+
+        gnorm_new = state.gnorm_mem.at[ids].set(ssq) if need_gnorm \
+            else state.gnorm_mem
+        loss_new = state.loss_mem.at[ids].set(aux["loss0"]) \
+            if need_loss else state.loss_mem
+
+        new_state = state._replace(
+            params=new_params, ef_mem=new_ef, c_global=c_global_new,
+            c_i=c_i_new, lam=lam_new,
+            net=NetSimState(net_channel, net_logbw),
+            gnorm_mem=gnorm_new, loss_mem=loss_new)
+        return new_state, {"loss": aux["loss0"].mean(), "ids": ids}
+
+    return step

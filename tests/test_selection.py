@@ -158,7 +158,9 @@ def _score_inputs(rng, n=12):
                 loss_mem=jnp.asarray(rng.uniform(0, 2, n)
                                      .astype(np.float32)),
                 channel=jnp.asarray((rng.random(n) < 0.4)
-                                    .astype(np.int32)))
+                                    .astype(np.int32)),
+                stale_mem=jnp.asarray(rng.integers(0, 5, n)
+                                      .astype(np.float32)))
 
 
 @pytest.mark.parametrize("policy", POLICIES)
