@@ -79,7 +79,9 @@ from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
 from repro.kernels.common import DENOM_EPS
 from repro.kernels.netsim_mask import ops as netsim_ops
+from repro.kernels.robust_agg import ops as robust_ops
 from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.netsim import faults as faults_mod
 from repro.netsim.bandwidth import logbw_round_step
 from repro.netsim.channel import ge_transition_probs
 from repro.netsim.delivery import (MAX_LATENESS, arrival_lateness,
@@ -118,6 +120,14 @@ class EngineState(NamedTuple):
     # they land in, staleness-discounted. Zero-size when the server
     # mode carries no buffer (sync / semi_sync, untraced).
     buf: ArrivalBuffer
+    # fault-model carries (repro/netsim/faults.py); (0,) when the fault
+    # subsystem is compiled out (faults.enabled=False):
+    # last GENUINE upload per client — what a stale-echo client replays
+    echo_mem: jnp.ndarray   # (N, D_up) f32, or (0,)
+    # cumulative quarantined-packet fraction per client — the
+    # reputation the reputation_aware selection policy reads. (0,)
+    # unless that policy (or traced selection) needs it.
+    rep_mem: jnp.ndarray    # (N,) f32, or (0,)
 
 
 class ScenarioCtx(NamedTuple):
@@ -159,6 +169,17 @@ class ScenarioCtx(NamedTuple):
     srv_mode: jnp.ndarray    # (len(async_agg.MODES),) f32 one-hot
     stale_alpha: jnp.ndarray  # () f32 staleness discount exponent
     grace_s: jnp.ndarray     # () f32 semi_sync grace window (seconds)
+    # fault-injection rates + defense gates (repro/netsim/faults.py;
+    # unused-but-traced when faults.enabled=False — XLA prunes them)
+    f_corrupt: jnp.ndarray   # () f32 P(packet Gaussian-corrupted)
+    f_cscale: jnp.ndarray    # () f32 corruption noise stddev
+    f_bitflip: jnp.ndarray   # () f32 P(packet single-bit flip)
+    f_fail: jnp.ndarray      # () f32 P(client NaN device failure)
+    f_flip: jnp.ndarray      # () f32 P(client sign-flip byzantine)
+    f_echo: jnp.ndarray      # () f32 P(client stale-echo replay)
+    d_screen: jnp.ndarray    # () f32 gate: finite-screen quarantine
+    d_clip: jnp.ndarray      # () f32 clip norm (faults.CLIP_OFF = off)
+    d_trim: jnp.ndarray      # () f32 gate: trimmed-mean aggregation
 
 
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -208,6 +229,10 @@ SWEEP_VARYING_SEL_FIELDS = sel_mod.SWEEP_VARYING_SEL_FIELDS
 # server-mode knobs (core/async_agg.py); the mode NAME joins them when
 # cfg.srv.traced (it rides ScenarioCtx as a one-hot then)
 SWEEP_VARYING_SRV_FIELDS = async_mod.SWEEP_VARYING_SRV_FIELDS
+# fault rates and defense gates (repro/netsim/faults.py); only
+# faults.enabled and defense.trim_k are static program structure
+SWEEP_VARYING_FAULT_FIELDS = faults_mod.SWEEP_VARYING_FAULT_FIELDS
+SWEEP_VARYING_DEF_FIELDS = faults_mod.SWEEP_VARYING_DEF_FIELDS
 
 
 def static_signature(cfg):
@@ -230,9 +255,12 @@ def static_signature(cfg):
         # the server mode itself is traced (ScenarioCtx.srv_mode):
         # traced configs share one program across all three modes
         srv = dataclasses.replace(srv, mode="sync")
+    flt = dataclasses.replace(
+        cfg.faults, **{f: 0.0 for f in SWEEP_VARYING_FAULT_FIELDS})
+    dfn = dataclasses.replace(cfg.defense, **faults_mod.DEF_NEUTRAL)
     return dataclasses.replace(
-        cfg, tra=tra, netsim=ns, sel=sel, srv=srv, seed=0,
-        selection="all", eligible_ratio=1.0)
+        cfg, tra=tra, netsim=ns, sel=sel, srv=srv, faults=flt,
+        defense=dfn, seed=0, selection="all", eligible_ratio=1.0)
 
 
 def _static_key(cfg):
@@ -247,7 +275,8 @@ def _static_key(cfg):
     stale cache entry."""
     return (dataclasses.astuple(dataclasses.replace(
         static_signature(cfg), n_rounds=0, eval_every=0, engine="scan")),
-        uplink_ops.resolved_impl(), netsim_ops.resolved_impl())
+        uplink_ops.resolved_impl(), netsim_ops.resolved_impl(),
+        robust_ops.resolved_impl())
 
 
 # step/jit cache shared across engine instances: scenario-varying values
@@ -259,6 +288,11 @@ _STEP_CACHE: Dict[Any, Any] = {}
 
 
 def _cached_jits(cfg, cohort: int):
+    # validate BEFORE the cache lookup: the key normalises sweep-
+    # varying fields away, so an invalid config (e.g. defenses with
+    # faults.enabled=False) can collide with a valid cached program
+    # and would otherwise skip its construction-time checks
+    validate_round_config(cfg)
     key = (_static_key(cfg), cohort)
     if key not in _STEP_CACHE:
         step = make_round_step(cfg, cohort)
@@ -318,7 +352,83 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
         buf=async_mod.init_arrival_buffer(cfg.srv.buffer_k, up_dim)
         if cfg.srv.traced or cfg.srv.mode == "async"
         else async_mod.empty_arrival_buffer(),
+        echo_mem=jnp.zeros((N, up_dim), jnp.float32)
+        if cfg.faults.enabled else jnp.zeros((0,), jnp.float32),
+        rep_mem=jnp.zeros((N,), jnp.float32)
+        if cfg.faults.enabled
+        and (cfg.sel.traced or cfg.sel.policy == "reputation_aware")
+        else jnp.zeros((0,), jnp.float32),
     )
+
+
+def validate_round_config(cfg) -> None:
+    """Cross-subsystem static-config checks, raised at engine
+    construction (NOT inside the program cache: the cache key
+    normalises sweep-varying fields away, so these must run before
+    any cache lookup)."""
+    tra_cfg = cfg.tra
+    ns = cfg.netsim
+    debias = tra_cfg.debias
+    if ns.channel != "iid" and not tra_cfg.enabled:
+        raise ValueError(
+            f"netsim channel={ns.channel!r} models lossy TRA uploads "
+            f"and requires tra.enabled=True (with TRA off, uploads are "
+            f"reliable and the channel would be silently inert)")
+    sel = cfg.sel
+    traced_sel = sel.traced
+    policy = sel.policy
+    if not traced_sel and policy == "netsim_state" \
+            and ns.channel != "gilbert_elliott":
+        raise ValueError(
+            "selection policy 'netsim_state' scores the Gilbert-"
+            "Elliott channel state and requires "
+            "netsim.channel='gilbert_elliott' (with the iid channel "
+            "there is no state to prefer)")
+    if not traced_sel and policy == "staleness_aware" \
+            and not ns.deadline:
+        raise ValueError(
+            "selection policy 'staleness_aware' scores observed "
+            "deadline lateness and requires netsim.deadline=True "
+            "(without a deadline nothing is ever late)")
+    srv_cfg = cfg.srv
+    nonsync = srv_cfg.traced or srv_cfg.mode != "sync"
+    use_buf = srv_cfg.traced or srv_cfg.mode == "async"
+    if nonsync and not ns.deadline:
+        raise ValueError(
+            "server modes semi_sync/async (and srv.traced, which "
+            "includes them) schedule uploads by arrival time and "
+            "require netsim.deadline=True")
+    if use_buf and debias == "per_coord_count":
+        raise ValueError(
+            "the async arrival buffer composes with scalar-"
+            "denominator debias modes only; per_coord_count keeps "
+            "per-coordinate denominators that cannot be re-weighted "
+            "after the fact (use semi_sync, or another debias mode)")
+    dfn_cfg = cfg.defense
+    use_faults = cfg.faults.enabled
+    trim_k = dfn_cfg.trim_k
+    if not use_faults and (dfn_cfg.screen or dfn_cfg.clip
+                           or dfn_cfg.trim or trim_k > 0):
+        raise ValueError(
+            "defenses (screen/clip/trim/trim_k) require "
+            "faults.enabled=True — the robust uplink path is only "
+            "compiled with the fault model (enable it with zero rates "
+            "for a fault-free defended run)")
+    if dfn_cfg.trim and trim_k < 1:
+        raise ValueError(
+            "defense.trim=True needs trim_k >= 1 (the static per-side "
+            "trim count that sizes the extraction loop)")
+    if trim_k > 0 and debias == "per_coord_count":
+        raise ValueError(
+            "trimmed-mean aggregation replaces the weighted mean and "
+            "cannot compose with per_coord_count's per-coordinate "
+            "denominators (use another debias mode, or trim_k=0)")
+    if not traced_sel and policy == "reputation_aware" \
+            and not use_faults:
+        raise ValueError(
+            "selection policy 'reputation_aware' scores quarantine "
+            "counts and requires faults.enabled=True (without the "
+            "fault path nothing is ever quarantined)")
 
 
 def make_round_step(cfg, cohort: int):
@@ -344,11 +454,7 @@ def make_round_step(cfg, cohort: int):
     # (burst length, loss emissions, rho, deadline) are traced ctx
     # fields and may vary per scenario.
     ns = cfg.netsim
-    if ns.channel != "iid" and not tra_cfg.enabled:
-        raise ValueError(
-            f"netsim channel={ns.channel!r} models lossy TRA uploads "
-            f"and requires tra.enabled=True (with TRA off, uploads are "
-            f"reliable and the channel would be silently inert)")
+    validate_round_config(cfg)
     use_ge = ns.channel == "gilbert_elliott"
     use_bw = ns.bw_ar1
     use_dl = ns.deadline
@@ -360,17 +466,6 @@ def make_round_step(cfg, cohort: int):
     need_gnorm = traced_sel or policy == "gradient_norm"
     need_loss = traced_sel or policy == "loss_aware"
     need_stale = traced_sel or policy == "staleness_aware"
-    if not traced_sel and policy == "netsim_state" and not use_ge:
-        raise ValueError(
-            "selection policy 'netsim_state' scores the Gilbert-"
-            "Elliott channel state and requires "
-            "netsim.channel='gilbert_elliott' (with the iid channel "
-            "there is no state to prefer)")
-    if not traced_sel and policy == "staleness_aware" and not use_dl:
-        raise ValueError(
-            "selection policy 'staleness_aware' scores observed "
-            "deadline lateness and requires netsim.deadline=True "
-            "(without a deadline nothing is ever late)")
     # server aggregation mode (core/async_agg.py): the mode (or
     # "traced") and the buffer size are static program structure; the
     # staleness exponent and grace window ride ScenarioCtx.
@@ -379,17 +474,16 @@ def make_round_step(cfg, cohort: int):
     srv_mode = srv_cfg.mode
     use_buf = traced_srv or srv_mode == "async"
     nonsync = traced_srv or srv_mode != "sync"
-    if nonsync and not use_dl:
-        raise ValueError(
-            "server modes semi_sync/async (and srv.traced, which "
-            "includes them) schedule uploads by arrival time and "
-            "require netsim.deadline=True")
-    if use_buf and debias == "per_coord_count":
-        raise ValueError(
-            "the async arrival buffer composes with scalar-"
-            "denominator debias modes only; per_coord_count keeps "
-            "per-coordinate denominators that cannot be re-weighted "
-            "after the fact (use semi_sync, or another debias mode)")
+    # fault model + defenses (repro/netsim/faults.py):
+    # ``faults.enabled`` is the single static switch for the whole
+    # subsystem; every rate and every defense gate is traced.
+    # ``defense.trim_k`` alone is static (extraction-loop extent).
+    flt_cfg = cfg.faults
+    dfn_cfg = cfg.defense
+    use_faults = flt_cfg.enabled
+    trim_k = dfn_cfg.trim_k
+    need_rep = use_faults and (traced_sel
+                               or policy == "reputation_aware")
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -430,14 +524,15 @@ def make_round_step(cfg, cohort: int):
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
                 channel=state.net.channel, stale_mem=state.stale_mem,
-                n_clients=N)
+                rep_mem=state.rep_mem, n_clients=N)
         else:
             logits = sel_mod.policy_logits(
                 policy, temperature=ctx.sel_temp,
                 explore=ctx.sel_explore,
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
-                channel=state.net.channel, stale_mem=state.stale_mem)
+                channel=state.net.channel, stale_mem=state.stale_mem,
+                rep_mem=state.rep_mem)
         ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
                                            C)
         counts = dd.counts[ids]                              # (C,)
@@ -470,6 +565,20 @@ def make_round_step(cfg, cohort: int):
                 lambda p, x, y: local(p, x, y, hyper),
                 in_axes=(None, 0, 0))(params, X, Y)
             flat = flatten_clients(uploads, C)               # (C, D)
+
+        # client-level fault injection (repro/netsim/faults.py): what
+        # the cohort actually UPLOADS — echo replays of the previous
+        # genuine update, sign flips, NaN device failures. Drawn from a
+        # separate fold of the round key (FAULT_FOLD), so the base
+        # engine's selection/batch/TRA draws are untouched; zero rates
+        # pass ``flat`` through bitwise.
+        flat_clean = flat
+        if use_faults:
+            fkey = jax.random.fold_in(key, faults_mod.FAULT_FOLD)
+            flat = faults_mod.inject_client_faults(
+                fkey, flat, state.echo_mem[ids],
+                fail_rate=ctx.f_fail, flip_rate=ctx.f_flip,
+                echo_rate=ctx.f_echo)
 
         # TRA uplink: EF re-inject, lossy-upload mask, per-mode debias
         # aggregation, the new EF memory rows and (q-FedAvg) the masked
@@ -587,9 +696,21 @@ def make_round_step(cfg, cohort: int):
                     a_c = ontime
                     arrival = a_async_log
 
+        # packet-level fault injection: damage in flight, applied to
+        # the packets the channel/deadline actually DELIVERS (a lost
+        # packet never reaches the server, so EF recycling stays
+        # clean). Zero rates pass ``xp`` through bitwise.
+        if use_faults:
+            xp = faults_mod.inject_packet_faults(
+                fkey, xp, pkt_mask, corrupt_rate=ctx.f_corrupt,
+                corrupt_scale=ctx.f_cscale,
+                bitflip_rate=ctx.f_bitflip)
+
         kept = None
-        if debias == "per_client_rate":
-            # coordinate-weighted kept fraction (last packet partial)
+        if debias == "per_client_rate" and not use_faults:
+            # coordinate-weighted kept fraction (last packet partial);
+            # the fault path computes this from the SCREENED mask
+            # inside robust_uplink_round instead
             pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
             kept = (pkt_mask @ pcnt) / D_up
 
@@ -614,11 +735,27 @@ def make_round_step(cfg, cohort: int):
         # multiply, bitwise legacy.
         w_up = w_agg if a_c is None else w_agg * a_c
 
-        agg, new_ef_rows, ssq = uplink_ops.uplink_round(
-            xp, pkt_mask, w_up, mode=debias, d_up=D_up,
-            ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
-            sufficient=suff, loss_rate=lr_c, mult=mult,
-            want_ssq=want_ssq)
+        if use_faults:
+            # defended uplink (kernels/robust_agg): finite-screen
+            # quarantine (bad packets become AS IF LOST — same debias
+            # machinery), norm clip, trimmed mean — every gate traced,
+            # off-gates bitwise the undefended expressions below.
+            rob = robust_ops.robust_uplink_round(
+                xp, pkt_mask, w_up, mode=debias, d_up=D_up,
+                screen=ctx.d_screen, clip_norm=ctx.d_clip,
+                trim_gate=ctx.d_trim, trim_k=trim_k,
+                ef_rows=state.ef_mem[ids] if ef else None,
+                sufficient=suff, loss_rate=lr_c, mult=mult,
+                want_ssq=want_ssq)
+            agg, new_ef_rows, ssq = rob.agg, rob.ef_rows, rob.ssq
+            kept = rob.kept
+        else:
+            rob = None
+            agg, new_ef_rows, ssq = uplink_ops.uplink_round(
+                xp, pkt_mask, w_up, mode=debias, d_up=D_up,
+                ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
+                sufficient=suff, loss_rate=lr_c, mult=mult,
+                want_ssq=want_ssq)
         new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
             else state.ef_mem
 
@@ -655,8 +792,22 @@ def make_round_step(cfg, cohort: int):
                 loss_rate=lr_c, mult=mult)
             coord_mask = jnp.repeat(loss_mask, F, axis=1)[:, :D_up]
             base_rows = flat + state.ef_mem[ids] if ef else flat
+            if use_faults:
+                # the buffer refuses to launder corrupted data: the
+                # norm clip applies to buffered contributions too, a
+                # quarantined arrival (any bad delivered packet) is
+                # refused outright, and candidates are sanitised so a
+                # NaN in a LOST packet cannot ride contrib through
+                # coord_mask * 0 (NaN * 0 = NaN). All behind the
+                # traced screen/clip gates — off-gates stay bitwise.
+                scr_on = ctx.d_screen > 0.5
+                q_full = q_full * rob.s_clip
+                base_rows = jnp.where(
+                    scr_on & ~jnp.isfinite(base_rows), 0.0, base_rows)
             contrib = base_rows * coord_mask * q_full[:, None]
             cand_live = (lateness > 0.0) & (lateness < MAX_LATENESS)
+            if use_faults:
+                cand_live = cand_live & ~(scr_on & (rob.qcnt > 0.0))
             if traced_srv:
                 cand_live = cand_live & is_async
             new_buf = async_mod.buffer_insert(
@@ -723,13 +874,25 @@ def make_round_step(cfg, cohort: int):
             if need_loss else state.loss_mem
         stale_new = state.stale_mem.at[ids].set(lateness) \
             if need_stale and use_dl else state.stale_mem
+        # fault-model memories: the echo memory records what each
+        # client GENUINELY computed (the replay source), the
+        # reputation memory accumulates this round's quarantined
+        # fraction for the reputation_aware policy
+        echo_new = state.echo_mem.at[ids].set(flat_clean) \
+            if use_faults else state.echo_mem
+        rep_new = state.rep_mem.at[ids].add(rob.qcnt / P) \
+            if need_rep else state.rep_mem
 
         new_state = EngineState(new_params, new_ef, c_global_new,
                                 c_i_new, lam_new,
                                 NetSimState(net_channel, net_logbw),
                                 gnorm_new, loss_new, stale_new,
-                                new_buf)
+                                new_buf, echo_new, rep_new)
         logs = {"loss": aux["loss0"].mean(), "ids": ids}
+        if use_faults:
+            # per-cohort-slot quarantined-packet counts — the
+            # robustness analyses' observability signal
+            logs["quarantine"] = rob.qcnt
         if use_dl:
             # effective per-cohort-slot arrival weight (1 = landed on
             # time at full weight, 0 = dropped): the participation
@@ -790,6 +953,8 @@ class RoundScanEngine:
         ns = cfg.netsim
         sel = cfg.sel
         srv = cfg.srv
+        flt = cfg.faults
+        dfn = cfg.defense
         self.ctx = ScenarioCtx(
             base_key=jax.random.PRNGKey(cfg.seed),
             loss_rate=loss_rate,
@@ -810,7 +975,16 @@ class RoundScanEngine:
             else jnp.zeros((0,), jnp.float32),
             srv_mode=jnp.asarray(async_mod.mode_onehot(srv.mode)),
             stale_alpha=jnp.float32(srv.staleness_alpha),
-            grace_s=jnp.float32(srv.grace_s))
+            grace_s=jnp.float32(srv.grace_s),
+            f_corrupt=jnp.float32(flt.corrupt_rate),
+            f_cscale=jnp.float32(flt.corrupt_scale),
+            f_bitflip=jnp.float32(flt.bitflip_rate),
+            f_fail=jnp.float32(flt.fail_rate),
+            f_flip=jnp.float32(flt.flip_rate),
+            f_echo=jnp.float32(flt.echo_rate),
+            d_screen=jnp.float32(1.0 if dfn.screen else 0.0),
+            d_clip=jnp.float32(faults_mod.clip_knob(dfn)),
+            d_trim=jnp.float32(1.0 if dfn.trim else 0.0))
         self._step, self._single, self._block = _cached_jits(
             cfg, self.cohort)
 

@@ -40,6 +40,13 @@ inputs:
                          by the deadline path each round); the
                          complement of the async server's staleness
                          discount on the selection side
+    reputation_aware     s_i = -log1p(reputation_i) — prefer clients
+                         whose uploads have NOT been quarantined by
+                         the finite screen (``EngineState.rep_mem``,
+                         the cumulative quarantined-packet fraction
+                         the fault model accumulates per client);
+                         requires ``FaultConfig.enabled`` — without
+                         the fault path nothing is ever quarantined
 
 The knobs split exactly the way the engine splits all knobs:
 
@@ -84,7 +91,8 @@ import numpy as np
 from repro.network.trace import DEFAULT_THRESHOLD_MBPS
 
 POLICIES = ("uniform", "bandwidth_threshold", "gradient_norm",
-            "loss_aware", "netsim_state", "staleness_aware")
+            "loss_aware", "netsim_state", "staleness_aware",
+            "reputation_aware")
 
 # temperature guard: temperature=0 means "as hard as f32 allows", not
 # a NaN program
@@ -152,7 +160,7 @@ def select_clients(key, scores, eligible, k: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
                      gnorm_mem=None, loss_mem=None, channel=None,
-                     stale_mem=None):
+                     stale_mem=None, rep_mem=None):
     """(N,) raw score s_i for one policy (None for ``uniform``).
 
     Inputs may be None when a policy's score source is absent (traced
@@ -188,18 +196,27 @@ def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
         # chronically late ones are suppressed smoothly (log1p keeps
         # MAX_LATENESS sentinels finite, ~-14, not -inf starvation)
         return -jnp.log1p(stale_mem)
+    if policy == "reputation_aware":
+        if rep_mem is None or rep_mem.shape[-1] == 0:
+            return None
+        # negative log-reputation: never-quarantined (mem 0) clients
+        # score 0, repeat offenders are suppressed smoothly — soft
+        # exclusion, so a client with one unlucky bit flip is not
+        # starved forever the way a hard ban would
+        return -jnp.log1p(rep_mem)
     raise ValueError(f"unknown selection policy {policy!r}")
 
 
 def policy_logits(policy: str, *, temperature, explore,
                   threshold_mbps=None, logbw=None, gnorm_mem=None,
-                  loss_mem=None, channel=None, stale_mem=None):
+                  loss_mem=None, channel=None, stale_mem=None,
+                  rep_mem=None):
     """Effective Gumbel-top-k logits for one static policy
     (None ⇔ uniform sampling, the legacy-bitwise path)."""
     s = raw_policy_score(policy, threshold_mbps=threshold_mbps,
                          logbw=logbw, gnorm_mem=gnorm_mem,
                          loss_mem=loss_mem, channel=channel,
-                         stale_mem=stale_mem)
+                         stale_mem=stale_mem, rep_mem=rep_mem)
     if s is None:
         return None
     return (1.0 - explore) * s / jnp.maximum(temperature, TEMP_EPS)
@@ -208,7 +225,7 @@ def policy_logits(policy: str, *, temperature, explore,
 def traced_policy_logits(sel_policy, *, temperature, explore,
                          threshold_mbps, logbw=None, gnorm_mem=None,
                          loss_mem=None, channel=None, stale_mem=None,
-                         n_clients=None):
+                         rep_mem=None, n_clients=None):
     """Logits with the POLICY ITSELF traced: every policy's raw score
     is computed and contracted with the (len(POLICIES),) one-hot
     ``sel_policy`` — so scenarios of one vmapped program can each run a
@@ -220,7 +237,7 @@ def traced_policy_logits(sel_policy, *, temperature, explore,
         s = raw_policy_score(p, threshold_mbps=threshold_mbps,
                              logbw=logbw, gnorm_mem=gnorm_mem,
                              loss_mem=loss_mem, channel=channel,
-                             stale_mem=stale_mem)
+                             stale_mem=stale_mem, rep_mem=rep_mem)
         rows.append(jnp.zeros((n_clients,), jnp.float32)
                     if s is None else s)
     raw = jnp.einsum("p,pn->n", sel_policy, jnp.stack(rows))

@@ -36,6 +36,7 @@ from repro.core.mlp import mlp_accuracy, mlp_init
 from repro.core.sweep import SweepEngine
 from repro.core.tra import TRAConfig
 from repro.netsim.config import NetSimConfig
+from repro.netsim.faults import DefenseConfig, FaultConfig
 from repro.data.synthetic import (FederatedDataset, padded_eval_set,
                                   sample_batches)
 from repro.network.trace import (ClientNetworks, eligible_by_ratio,
@@ -72,6 +73,17 @@ class FLConfig:
     # uploads land staleness-discounted in the round they arrive).
     # Requires netsim.deadline=True for the non-sync modes.
     srv: AsyncConfig = dataclasses.field(default_factory=AsyncConfig)
+    # uplink fault injection (repro/netsim/faults.py): corruption the
+    # transport DELIVERS — per-packet Gaussian/bit-flip damage,
+    # per-client NaN device failures, sign flips, stale echoes. The
+    # default (enabled=False) is the pre-faults engine bit-for-bit.
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    # robust-aggregation defenses (kernels/robust_agg): finite-screen
+    # quarantine, per-client norm clipping, coordinate-wise trimmed
+    # mean. Gates are traced; requires faults.enabled (the defended
+    # uplink path is only compiled with the fault model).
+    defense: DefenseConfig = dataclasses.field(
+        default_factory=DefenseConfig)
     # algorithm hyper-parameters (paper / source-code defaults)
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps

@@ -49,7 +49,9 @@ from repro.core import async_agg as async_mod
 from repro.core import selection as sel_mod
 from repro.core import tra as tra_mod
 from repro.core.async_agg import AsyncConfig
-from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
+from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_DEF_FIELDS,
+                               SWEEP_VARYING_FAULT_FIELDS,
+                               SWEEP_VARYING_FIELDS,
                                SWEEP_VARYING_NETSIM_FIELDS,
                                SWEEP_VARYING_SEL_FIELDS,
                                SWEEP_VARYING_SRV_FIELDS,
@@ -59,7 +61,9 @@ from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_FIELDS,
                                static_signature)
 from repro.core.mlp import mlp_init
 from repro.core.selection import SelectionConfig
+from repro.netsim import faults as faults_mod
 from repro.netsim.config import NetSimConfig
+from repro.netsim.faults import DefenseConfig, FaultConfig
 from repro.data.synthetic import (DeviceDataset, FederatedDataset,
                                   stage_on_device,
                                   stage_scenarios_on_device)
@@ -95,6 +99,12 @@ class Scenario:
     # sweep config is traced (cfg.srv.traced — the one-hot rides
     # ScenarioCtx.srv_mode); traced flag and buffer_k must agree
     srv: Optional[AsyncConfig] = None
+    # fault-model scenario axes (None -> cfg.faults / cfg.defense):
+    # the injection RATES and the defense GATES may vary per cell —
+    # a fault-rate x defense grid is ONE program; faults.enabled and
+    # defense.trim_k are static and must agree across the sweep
+    faults: Optional[FaultConfig] = None
+    defense: Optional[DefenseConfig] = None
     # per-client trace draws, needed when tra.per_client_loss or a
     # netsim bandwidth/deadline model is on
     packet_loss: Optional[np.ndarray] = None   # (N,) drop rates
@@ -118,6 +128,7 @@ def scenario_from_config(cfg, data: FederatedDataset,
     return Scenario(seed=cfg.seed, loss_rate=cfg.tra.loss_rate,
                     sufficient=sufficient, eligible=eligible, data=data,
                     netsim=cfg.netsim, sel=cfg.sel, srv=cfg.srv,
+                    faults=cfg.faults, defense=cfg.defense,
                     packet_loss=nets.packet_loss,
                     upload_mbps=nets.upload_mbps)
 
@@ -222,6 +233,23 @@ class SweepEngine:
                     f"traced flag / buffer size than the sweep config; "
                     f"only {SWEEP_VARYING_SRV_FIELDS} may vary per "
                     f"cell (the mode itself only with srv.traced=True)")
+        # per-scenario fault rates / defense knobs (faults.enabled and
+        # defense.trim_k are static program structure and must agree)
+        flts = self._flts = [
+            s.faults if s.faults is not None else cfg.faults
+            for s in self.scenarios]
+        dfns = self._dfns = [
+            s.defense if s.defense is not None else cfg.defense
+            for s in self.scenarios]
+        for i, (fl, df) in enumerate(zip(flts, dfns)):
+            ok = fl.enabled == cfg.faults.enabled \
+                and df.trim_k == cfg.defense.trim_k
+            if not ok:
+                raise ValueError(
+                    f"scenario {i} selects a different faults.enabled "
+                    f"/ defense.trim_k than the sweep config; only "
+                    f"faults.{SWEEP_VARYING_FAULT_FIELDS} and defense."
+                    f"{SWEEP_VARYING_DEF_FIELDS} may vary per cell")
         need_bw_score = cfg.sel.traced \
             or cfg.sel.policy == "bandwidth_threshold"
         if need_bw_score \
@@ -268,7 +296,25 @@ class SweepEngine:
             stale_alpha=jnp.asarray(
                 [sv.staleness_alpha for sv in srvs], jnp.float32),
             grace_s=jnp.asarray([sv.grace_s for sv in srvs],
-                                jnp.float32))
+                                jnp.float32),
+            f_corrupt=jnp.asarray([fl.corrupt_rate for fl in flts],
+                                  jnp.float32),
+            f_cscale=jnp.asarray([fl.corrupt_scale for fl in flts],
+                                 jnp.float32),
+            f_bitflip=jnp.asarray([fl.bitflip_rate for fl in flts],
+                                  jnp.float32),
+            f_fail=jnp.asarray([fl.fail_rate for fl in flts],
+                               jnp.float32),
+            f_flip=jnp.asarray([fl.flip_rate for fl in flts],
+                               jnp.float32),
+            f_echo=jnp.asarray([fl.echo_rate for fl in flts],
+                               jnp.float32),
+            d_screen=jnp.asarray([1.0 if df.screen else 0.0
+                                  for df in dfns], jnp.float32),
+            d_clip=jnp.asarray([faults_mod.clip_knob(df)
+                                for df in dfns], jnp.float32),
+            d_trim=jnp.asarray([1.0 if df.trim else 0.0
+                                for df in dfns], jnp.float32))
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
         if cache_key not in _SWEEP_CACHE:
             step = make_round_step(cfg, self.cohort)
@@ -280,7 +326,10 @@ class SweepEngine:
                                    sel_threshold=0, sel_temp=0,
                                    sel_explore=0, sel_policy=0,
                                    sel_logbw=0, srv_mode=0,
-                                   stale_alpha=0, grace_s=0)
+                                   stale_alpha=0, grace_s=0,
+                                   f_corrupt=0, f_cscale=0, f_bitflip=0,
+                                   f_fail=0, f_flip=0, f_echo=0,
+                                   d_screen=0, d_clip=0, d_trim=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
             _SWEEP_CACHE[cache_key] = (step, jax.jit(
                 lambda ctx, state, ts: jax.lax.scan(
@@ -310,8 +359,10 @@ class SweepEngine:
                     f"field; only {SWEEP_VARYING_FIELDS}, tra."
                     f"{SWEEP_VARYING_TRA_FIELDS}, netsim."
                     f"{SWEEP_VARYING_NETSIM_FIELDS}, sel."
-                    f"{SWEEP_VARYING_SEL_FIELDS} and srv."
-                    f"{SWEEP_VARYING_SRV_FIELDS} (plus sel.policy / "
+                    f"{SWEEP_VARYING_SEL_FIELDS}, srv."
+                    f"{SWEEP_VARYING_SRV_FIELDS}, faults."
+                    f"{SWEEP_VARYING_FAULT_FIELDS} and defense."
+                    f"{SWEEP_VARYING_DEF_FIELDS} (plus sel.policy / "
                     f"srv.mode under their traced=True) may vary in "
                     f"one sweep")
         if isinstance(datas, FederatedDataset):
@@ -337,6 +388,7 @@ class SweepEngine:
                              n, c.tra.threshold_mbps),
                          eligible=eligible[i], data=d,
                          netsim=c.netsim, sel=c.sel, srv=c.srv,
+                         faults=c.faults, defense=c.defense,
                          packet_loss=n.packet_loss,
                          upload_mbps=n.upload_mbps)
                 for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]

@@ -1,0 +1,3 @@
+"""Robust uplink aggregation: finite-screening quarantine, per-client
+norm clipping and coordinate-wise trimmed-mean — the defense half of
+the fault model in `repro/netsim/faults.py` (see ops.py)."""

@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the robust-aggregation kernel.
+
+The screen/clip arithmetic here is expression-for-expression the
+undefended `kernels/uplink_fused/ref.py` math whenever the gates are
+off: sanitisation and mask-tightening route through ``jnp.where`` on
+the gate predicate, so a false gate passes the legacy operand through
+BIT-untouched (never ``x * gate`` arithmetic, whose ``-0 + 0 = +0``
+would break the bitwise-off contract). The trimmed mean uses
+``jnp.sort`` — deliberately a different algorithm from the kernel's
+k-pass min/max extraction, so the parity smoke compares two
+independent implementations of the same estimator.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import DENOM_EPS
+
+# Valid-slot sentinel for the trimmed-mean extraction: beyond any f32
+# the engine produces (screened values are finite), so invalid slots
+# sort past every real value without becoming inf (inf - inf traps).
+TRIM_BIG = 3.0e38
+
+
+def masked_trimmed_mean(y, valid, k: int):
+    """Coordinate-wise k-trimmed mean over the client axis.
+
+    y: (C, P, F) per-client debias-scaled estimates; valid: (C, P) f32
+    per-packet validity (delivery mask x screening x weight>0). Per
+    coordinate, drop the k largest and k smallest VALID values and
+    average the rest; coordinates with <= 2k valid values fall back to
+    the plain masked mean (never an empty average). Returns (P, F).
+    """
+    C = y.shape[0]
+    vf = valid[:, :, None]
+    vb = vf > 0.0
+    n = vf.sum(0)                                        # (P, 1)
+    total = (y * vf).sum(0)                              # (P, F)
+    lo = jnp.sort(jnp.where(vb, y, TRIM_BIG), axis=0)
+    hi = jnp.sort(jnp.where(vb, y, -TRIM_BIG), axis=0)
+    bot = lo[:k].sum(0)
+    top = hi[C - k:].sum(0)
+    cnt = jnp.maximum(n - 2.0 * k, 1.0)
+    return jnp.where(n > 2.0 * k, (total - top - bot) / cnt,
+                     total / jnp.maximum(n, 1.0))
+
+
+def robust_ref(x, m, q, w_or_den, *, ef=None, screen, trim_gate=None,
+               g=None, w_pos=None, trim_k: int = 0, per_coord: bool,
+               eps: float = DENOM_EPS):
+    """x: (C, P, F) unmasked uploads (post fault injection); ef:
+    (C, P, F) or None; m: (C, P) delivery mask; q: (C,) debias scales
+    with the clip factor pre-folded; ``w_or_den`` as in ``uplink_ref``.
+    ``screen`` / ``trim_gate`` are traced () gates; ``g`` (C,) is the
+    per-client trim estimate scale and ``w_pos`` (C,) the weight>0
+    validity (both only when ``trim_k > 0``).
+
+    Returns (agg (P, F) f32, ef_out (C, P, F) | None, the screened
+    mask m_eff (C, P)).
+    """
+    x = x.astype(jnp.float32)
+    if ef is not None:
+        x = x + ef.astype(jnp.float32)
+    fin = jnp.isfinite(x)
+    scr = screen > 0.5
+    # quarantine: a delivered-but-bad packet becomes AS IF LOST — its
+    # mask bit drops (the debias machinery re-inflates survivors the
+    # same way it does for channel losses) and its payload zeroes so
+    # NaN cannot ride x*0 into the einsum.
+    x = jnp.where(scr & ~fin, 0.0, x)
+    m_eff = jnp.where(scr, m * fin.all(-1).astype(jnp.float32), m)
+    wm = m_eff * q[:, None]
+    num = jnp.einsum("cpf,cp->pf", x, wm)
+    if per_coord:
+        den = jnp.maximum((m_eff * w_or_den[:, None]).sum(0),
+                          eps)[:, None]
+    else:
+        den = w_or_den
+    agg = num / den
+    if trim_k > 0:
+        y = x * g[:, None, None]
+        agg_t = masked_trimmed_mean(y, m_eff * w_pos[:, None], trim_k)
+        agg = jnp.where(trim_gate > 0.5, agg_t, agg)
+    # EF keeps ONLY channel-lost packets (the original mask):
+    # quarantined packets are dropped permanently, never recycled —
+    # staleness/EF must not launder corrupted data. The payload is the
+    # sanitised one, so with screening on EF stays finite.
+    ef_out = x * (1.0 - m[:, :, None]) if ef is not None else None
+    return agg, ef_out, m_eff

@@ -1,0 +1,299 @@
+"""Pallas TPU kernel: screen + clip + trimmed-mean robust aggregation
+in one pass over the packetised upload tensor.
+
+For a cohort of C clients viewed as (C, P, F) packets with delivery
+masks m (C, P), per-client scales q (C,) (all four DEBIAS_MODES plus
+the clip factor pre-folded by ops.py) and traced defense gates, each
+grid cell computes — in a single read of x (and ef):
+
+    x_eff   = x + ef                                  (EF re-inject)
+    ok[c,p] = all_f isfinite(x_eff[c, p, :])          (finite screen)
+    x_san   = where(screen & ~isfinite, 0, x_eff)     (sanitise)
+    m_eff   = where(screen, m * ok, m)                (quarantine)
+    agg     = sum_c q[c] m_eff[c, p] x_san[c, p, f] / den[p]
+    agg     = where(trim, trimmed_mean_c(g[c] x_san), agg)
+    ef_out  = x_san * (1 - m)          (lost packets only — quarantined
+                                        payloads are never recycled)
+
+Tiling: the trimmed mean is a cross-CLIENT order statistic, so the
+client axis is NOT tiled — grid (P//bp,) with (C, bp, F) blocks (the
+whole cohort of one packet stripe in VMEM; ``pick_blocks_r`` sizes bp
+to keep the resident x+ef tiles under the VMEM budget). That removes
+the scratch accumulators the uplink megakernel needs: every output
+tile completes in its own grid cell.
+
+The trim extraction is k passes of masked min/max with
+first-occurrence removal via a client-axis cumsum (Mosaic-friendly; no
+``jnp.sort`` / ``argmin`` lowering required), deliberately a different
+algorithm from the ``jnp.sort`` reference oracle in ref.py.
+
+``robust_agg_batched_call`` adds a leading S grid axis over
+(S, C, P, F) inputs — same body — and ops.py wires it in as the
+``custom_vmap`` rule of the single call, so a sweep grid's defended
+uplink is one batched launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import DENOM_EPS, resolve_interpret
+from repro.kernels.robust_agg.ref import TRIM_BIG
+
+# VMEM budget for the resident (C, bp, F) x/ef tiles (bytes): blocks
+# are sized so ~3 such f32 tiles (x, ef, sanitised temps) fit.
+_VMEM_BUDGET = 6 << 20
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    for d in range(min(n, k), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_blocks_r(C: int, P: int, F: int,
+                  block_p: int | None = None) -> int:
+    """Packet block bp for the client-resident layout, clamped to a
+    divisor of P and to the VMEM budget for 3 f32 (C, bp, F) tiles."""
+    if block_p is None:
+        block_p = max(1, _VMEM_BUDGET // (3 * 4 * C * F))
+    return _largest_divisor_leq(P, block_p)
+
+
+def _trimmed_extract(y, valid, k: int):
+    """k-pass min/max trimmed mean over axis 0 (clients).
+
+    y: (C, bp, F); valid: (C, bp, 1) f32. Per coordinate: remove the k
+    smallest and k largest valid values by repeated masked min/max
+    (first occurrence retired via a cumsum over the client axis, so
+    duplicates retire one per pass), then average the remainder;
+    <= 2k valid values falls back to the plain masked mean.
+    """
+    vb = valid > 0.0
+    n = valid.sum(0)                                     # (bp, 1)
+    total = (y * valid).sum(0)                           # (bp, F)
+    y_lo = jnp.where(vb, y, TRIM_BIG)
+    y_hi = jnp.where(vb, y, -TRIM_BIG)
+    bot = jnp.zeros_like(total)
+    top = jnp.zeros_like(total)
+    for _ in range(k):
+        cur = y_lo.min(axis=0)
+        eq = y_lo == cur[None]
+        first = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=0) == 1)
+        y_lo = jnp.where(first, TRIM_BIG, y_lo)
+        bot = bot + cur
+        cur = y_hi.max(axis=0)
+        eq = y_hi == cur[None]
+        first = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=0) == 1)
+        y_hi = jnp.where(first, -TRIM_BIG, y_hi)
+        top = top + cur
+    cnt = jnp.maximum(n - 2.0 * k, 1.0)
+    return jnp.where(n > 2.0 * k, (total - top - bot) / cnt,
+                     total / jnp.maximum(n, 1.0))
+
+
+def _body(x, ef, m, q, g, wpos, wden, den, scr, trg, agg_at, efo_at, *,
+          per_coord, trim_k, eps, out_dtype):
+    """One grid cell (whole cohort x one packet stripe); shared by the
+    single and scenario-batched kernels."""
+    x = x.astype(jnp.float32)
+    if ef is not None:
+        x = x + ef.astype(jnp.float32)                # EF re-inject
+    fin = jnp.isfinite(x)
+    scr_on = scr > 0.5
+    x = jnp.where(scr_on & ~fin, 0.0, x)              # sanitise
+    ok = fin.all(-1).astype(jnp.float32)              # (C, bp)
+    m_eff = jnp.where(scr_on, m * ok, m)              # quarantine
+    num = jnp.einsum("cpf,cp->pf", x, m_eff * q)
+    if per_coord:
+        d = jnp.maximum((m_eff * wden).sum(axis=0), eps)[:, None]
+    else:
+        d = den                                       # ready scalar
+    agg = num / d
+    if trim_k > 0:
+        y = x * g[..., None]                          # g: (C, 1)
+        agg_t = _trimmed_extract(y, (m_eff * wpos)[..., None], trim_k)
+        agg = jnp.where(trg > 0.5, agg_t, agg)
+    agg_at[...] = agg
+    if efo_at is not None:
+        efo_at[...] = (x * (1.0 - m[..., None])).astype(out_dtype)
+
+
+def _unpack(refs, has_ef, has_trim, per_coord):
+    it = iter(refs)
+    x = next(it)
+    ef = next(it) if has_ef else None
+    m, q = next(it), next(it)
+    g = next(it) if has_trim else None
+    wpos = next(it) if has_trim else None
+    wden = next(it) if per_coord else None
+    den = None if per_coord else next(it)
+    scr, trg = next(it), next(it)
+    agg = next(it)
+    efo = next(it) if has_ef else None
+    return x, ef, m, q, g, wpos, wden, den, scr, trg, agg, efo
+
+
+def _kernel_single(*refs, per_coord, has_ef, has_trim, trim_k, eps,
+                   out_dtype):
+    (x, ef, m, q, g, wpos, wden, den, scr, trg, agg, efo) = _unpack(
+        refs, has_ef, has_trim, per_coord)
+    _body(x[...], ef[...] if ef is not None else None, m[...], q[...],
+          g[...] if g is not None else None,
+          wpos[...] if wpos is not None else None,
+          wden[...] if wden is not None else None,
+          den[0, 0] if den is not None else None,
+          scr[0, 0], trg[0, 0], agg, efo,
+          per_coord=per_coord, trim_k=trim_k, eps=eps,
+          out_dtype=out_dtype)
+
+
+def _kernel_batched(*refs, per_coord, has_ef, has_trim, trim_k, eps,
+                    out_dtype):
+    (x, ef, m, q, g, wpos, wden, den, scr, trg, agg, efo) = _unpack(
+        refs, has_ef, has_trim, per_coord)
+    _body(x[0], ef[0] if ef is not None else None, m[0], q[0],
+          g[0] if g is not None else None,
+          wpos[0] if wpos is not None else None,
+          wden[0] if wden is not None else None,
+          den[0, 0, 0] if den is not None else None,
+          scr[0, 0, 0], trg[0, 0, 0],
+          agg.at[0], efo.at[0] if efo is not None else None,
+          per_coord=per_coord, trim_k=trim_k, eps=eps,
+          out_dtype=out_dtype)
+
+
+def robust_agg_call(x, m, q, w_or_den, screen, trim_gate, *, ef=None,
+                    g=None, w_pos=None, trim_k: int = 0,
+                    block_p: int | None = None,
+                    interpret: bool | None = None,
+                    eps: float = DENOM_EPS, per_coord: bool):
+    """Single-scenario robust-aggregation kernel call.
+
+    Operand contract mirrors ``uplink_fused_call`` (x/ef (C, P, F),
+    m (C, P), q (C,), ``w_or_den`` per-coord weights or ready scalar)
+    plus the traced gates: ``screen`` / ``trim_gate`` () f32, and —
+    when ``trim_k > 0`` — ``g`` (C,) trim estimate scales and
+    ``w_pos`` (C,) weight>0 validity.
+
+    Returns (agg (P, F) f32, ef_out (C, P, F) stream-dtype | None).
+    """
+    C, P, F = x.shape
+    bp = pick_blocks_r(C, P, F, block_p)
+    gp = P // bp
+    interpret = resolve_interpret(interpret)
+    has_ef = ef is not None
+    has_trim = trim_k > 0
+
+    in_specs = [pl.BlockSpec((C, bp, F), lambda p: (0, p, 0))]
+    operands = [x]
+    if has_ef:
+        in_specs.append(pl.BlockSpec((C, bp, F), lambda p: (0, p, 0)))
+        operands.append(ef.astype(x.dtype))
+    in_specs += [pl.BlockSpec((C, bp), lambda p: (0, p)),
+                 pl.BlockSpec((C, 1), lambda p: (0, 0))]
+    operands += [m.astype(jnp.float32), q.astype(jnp.float32)[:, None]]
+    if has_trim:
+        in_specs += [pl.BlockSpec((C, 1), lambda p: (0, 0)),
+                     pl.BlockSpec((C, 1), lambda p: (0, 0))]
+        operands += [g.astype(jnp.float32)[:, None],
+                     w_pos.astype(jnp.float32)[:, None]]
+    if per_coord:
+        in_specs.append(pl.BlockSpec((C, 1), lambda p: (0, 0)))
+        operands.append(w_or_den.astype(jnp.float32)[:, None])
+    else:
+        in_specs.append(pl.BlockSpec((1, 1), lambda p: (0, 0)))
+        operands.append(jnp.asarray(w_or_den, jnp.float32).reshape(1, 1))
+    in_specs += [pl.BlockSpec((1, 1), lambda p: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda p: (0, 0))]
+    operands += [jnp.asarray(screen, jnp.float32).reshape(1, 1),
+                 jnp.asarray(trim_gate, jnp.float32).reshape(1, 1)]
+
+    out_specs = [pl.BlockSpec((bp, F), lambda p: (p, 0))]
+    out_shape = [jax.ShapeDtypeStruct((P, F), jnp.float32)]
+    if has_ef:
+        out_specs.append(pl.BlockSpec((C, bp, F), lambda p: (0, p, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((C, P, F), x.dtype))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel_single, per_coord=per_coord,
+                          has_ef=has_ef, has_trim=has_trim,
+                          trim_k=trim_k, eps=eps, out_dtype=x.dtype),
+        grid=(gp,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    outs = list(outs)
+    agg = outs.pop(0)
+    ef_out = outs.pop(0) if has_ef else None
+    return agg, ef_out
+
+
+def robust_agg_batched_call(x, m, q, w_or_den, screen, trim_gate, *,
+                            ef=None, g=None, w_pos=None, trim_k: int = 0,
+                            block_p: int | None = None,
+                            interpret: bool | None = None,
+                            eps: float = DENOM_EPS, per_coord: bool):
+    """Scenario-batched variant: leading S axis on every operand
+    ((S,) gates, (S,) or (S, C) ``w_or_den``), grid (S, P//bp)."""
+    S, C, P, F = x.shape
+    bp = pick_blocks_r(C, P, F, block_p)
+    gp = P // bp
+    interpret = resolve_interpret(interpret)
+    has_ef = ef is not None
+    has_trim = trim_k > 0
+
+    in_specs = [pl.BlockSpec((1, C, bp, F), lambda s, p: (s, 0, p, 0))]
+    operands = [x]
+    if has_ef:
+        in_specs.append(
+            pl.BlockSpec((1, C, bp, F), lambda s, p: (s, 0, p, 0)))
+        operands.append(ef.astype(x.dtype))
+    in_specs += [pl.BlockSpec((1, C, bp), lambda s, p: (s, 0, p)),
+                 pl.BlockSpec((1, C, 1), lambda s, p: (s, 0, 0))]
+    operands += [m.astype(jnp.float32),
+                 q.astype(jnp.float32)[..., None]]
+    if has_trim:
+        in_specs += [pl.BlockSpec((1, C, 1), lambda s, p: (s, 0, 0)),
+                     pl.BlockSpec((1, C, 1), lambda s, p: (s, 0, 0))]
+        operands += [g.astype(jnp.float32)[..., None],
+                     w_pos.astype(jnp.float32)[..., None]]
+    if per_coord:
+        in_specs.append(pl.BlockSpec((1, C, 1), lambda s, p: (s, 0, 0)))
+        operands.append(w_or_den.astype(jnp.float32)[..., None])
+    else:
+        in_specs.append(pl.BlockSpec((1, 1, 1), lambda s, p: (s, 0, 0)))
+        operands.append(
+            jnp.asarray(w_or_den, jnp.float32).reshape(S, 1, 1))
+    in_specs += [pl.BlockSpec((1, 1, 1), lambda s, p: (s, 0, 0)),
+                 pl.BlockSpec((1, 1, 1), lambda s, p: (s, 0, 0))]
+    operands += [jnp.asarray(screen, jnp.float32).reshape(S, 1, 1),
+                 jnp.asarray(trim_gate, jnp.float32).reshape(S, 1, 1)]
+
+    out_specs = [pl.BlockSpec((1, bp, F), lambda s, p: (s, p, 0))]
+    out_shape = [jax.ShapeDtypeStruct((S, P, F), jnp.float32)]
+    if has_ef:
+        out_specs.append(
+            pl.BlockSpec((1, C, bp, F), lambda s, p: (s, 0, p, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((S, C, P, F), x.dtype))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel_batched, per_coord=per_coord,
+                          has_ef=has_ef, has_trim=has_trim,
+                          trim_k=trim_k, eps=eps, out_dtype=x.dtype),
+        grid=(S, gp),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    outs = list(outs)
+    agg = outs.pop(0)
+    ef_out = outs.pop(0) if has_ef else None
+    return agg, ef_out

@@ -33,6 +33,7 @@ from repro.launch.train import synth_batch
 from repro.models import transformer as tf
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer)
+from repro.utils.guards import assert_finite_tree
 from repro.utils.shardctx import shard
 
 
@@ -249,7 +250,10 @@ def _run_sweep(cfg, tcfg, tra, args, rates):
         per = " ".join(f"r={r:.2f}:{l:8.4f}"
                        for r, l in zip(rates, losses))
         print(f"round {i:4d} {per} ({time.time()-t0:.2f}s)", flush=True)
-        assert np.all(np.isfinite(losses))
+        if not np.all(np.isfinite(losses)):
+            # fail fast naming the bad scenario/leaf, not loss=nan later
+            assert_finite_tree(params_s, name=f"round{i}/params")
+            assert_finite_tree({"loss": losses}, name=f"round{i}")
     return 0
 
 
@@ -334,7 +338,10 @@ def _run_async(cfg, tcfg, tra, args):
               f"ontime={int((lateness == 0).sum())}/{C} "
               f"buffered={len(ready)}->merged den={den:.3f} "
               f"({time.time()-t0:.2f}s)", flush=True)
-        assert np.isfinite(float(losses.mean()))
+        if not np.isfinite(float(losses.mean())):
+            # name the offending leaf (params or the loss itself)
+            assert_finite_tree(params, name=f"round{i}/params")
+            assert_finite_tree({"loss": losses}, name=f"round{i}")
     return 0
 
 
@@ -480,7 +487,12 @@ def main(argv=None):
         print(f"round {i:4d} loss={float(m['loss']):8.4f} "
               f"clients={np.asarray(m['client_losses']).round(3)}"
               f"{cohort_note} ({time.time()-t0:.2f}s)", flush=True)
-        assert np.isfinite(float(m["loss"]))
+        if not np.isfinite(float(m["loss"])):
+            # a NaN loss means either the model diverged or an upload
+            # poisoned the aggregate — name the leaf instead of a bare
+            # AssertionError so the failure is actionable
+            assert_finite_tree(params, name=f"round{i}/params")
+            assert_finite_tree(m, name=f"round{i}/metrics")
     return 0
 
 

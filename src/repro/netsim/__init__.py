@@ -11,13 +11,19 @@ from repro.netsim.config import CHANNELS, NetSimConfig
 from repro.netsim.delivery import (INFEASIBLE_SECS, MAX_LATENESS,
                                    arrival_lateness, deadline_delivered,
                                    grace_staleness, round_upload_seconds)
+from repro.netsim.faults import (CLIP_OFF, FAULT_FOLD, DefenseConfig,
+                                 FaultConfig, clip_knob,
+                                 inject_client_faults,
+                                 inject_packet_faults)
 from repro.netsim.state import NetSimState, init_net_state
 
 __all__ = [
-    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "INFEASIBLE_SECS",
+    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "CLIP_OFF", "DefenseConfig",
+    "FAULT_FOLD", "FaultConfig", "INFEASIBLE_SECS",
     "MAX_LATENESS", "NetSimConfig", "NetSimState", "arrival_lateness",
-    "deadline_delivered", "ge_transition_probs", "grace_staleness",
-    "init_channel_state", "init_logbw", "init_net_state",
+    "clip_knob", "deadline_delivered", "ge_transition_probs",
+    "grace_staleness", "init_channel_state", "init_logbw",
+    "init_net_state", "inject_client_faults", "inject_packet_faults",
     "logbw_round_step", "round_upload_seconds", "sample_ge_mask_numpy",
     "stationary_bad_frac",
 ]

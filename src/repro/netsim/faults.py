@@ -1,0 +1,153 @@
+"""Uplink fault model: corruption the transport DELIVERS.
+
+The netsim layer (channel/bandwidth/delivery) models packets that never
+arrive; this module models the complementary failure class — packets
+and uploads that arrive *wrong*. A UDP-style transport that skips
+retransmission (the paper's TRA) also skips the integrity round-trips,
+so the server must expect:
+
+  per-packet  — Gaussian payload corruption (bursty interference over
+                one packet's floats) and single bit-flips (memory /
+                link errors surviving a weak checksum),
+  per-client  — NaN/Inf "device failure" uploads (OOM'd or faulting
+                trainers), sign-flipped byzantine uploads, and
+                stale-echo replays (a client re-sending its previous
+                genuine update instead of computing a new one).
+
+All rates are TRACED scenario knobs (`FaultConfig`): a fault-rate x
+defense grid rides ``ScenarioCtx`` and compiles to ONE vmap(scan)
+program, like the loss/selection/mode grids. The only static switch is
+``FaultConfig.enabled`` — it gates the whole subsystem out of the
+compiled step so the default program is bitwise the PR-7 engine
+(tests/test_faults.py locks this against tests/_legacy_engine_v7.py).
+
+Defenses (`DefenseConfig`) live in ``kernels/robust_agg``; their gates
+(screen / clip / trim) are traced too, so defended and undefended
+cells share the program. ``trim_k`` alone is static (it sizes the
+extraction loop).
+
+Fault randomness draws from ``fold_in(round_key, FAULT_FOLD)`` — a
+fold constant disjoint from the netsim folds (``CH_INIT_FOLD``,
+``BW_FOLD``) and from the round chain — so enabling faults never
+perturbs the selection / batch / TRA draws of the base engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# fold_in tag for the fault PRNG stream ("FAUT"); applied to the
+# already-folded round key, so it must only be distinct from the other
+# second-level folds (netsim's BW_FOLD) — and, like them, from any
+# plausible round index.
+FAULT_FOLD = 0x46415554
+
+# clip_norm sentinel meaning "clipping off": no masked f32 upload norm
+# exceeds it, so the clip predicate is identically false.
+CLIP_OFF = 1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Uplink fault injection. ``enabled`` is STATIC (program
+    structure); every rate is traced and may vary per sweep scenario."""
+    enabled: bool = False       # static: compile the fault+defense path
+    corrupt_rate: float = 0.0   # P(packet hit by Gaussian corruption)
+    corrupt_scale: float = 1.0  # stddev of the additive corruption
+    bitflip_rate: float = 0.0   # P(packet suffers one random bit flip)
+    fail_rate: float = 0.0      # P(client uploads NaN — device failure)
+    flip_rate: float = 0.0      # P(client sign-flips — byzantine)
+    echo_rate: float = 0.0      # P(client replays its last genuine upload)
+
+
+# FaultConfig fields a sweep scenario may vary without recompiling
+SWEEP_VARYING_FAULT_FIELDS = ("corrupt_rate", "corrupt_scale",
+                              "bitflip_rate", "fail_rate", "flip_rate",
+                              "echo_rate")
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Robust-aggregation defenses (kernels/robust_agg). The gates are
+    TRACED (a defended and an undefended cell share one program);
+    ``trim_k`` is static — it sizes the coordinate-wise extraction
+    loop, so every scenario in a sweep must agree on it (0 leaves the
+    trimming machinery out of the program entirely)."""
+    screen: bool = False     # finite-screen: quarantine bad packets
+    clip: bool = False       # per-client norm clipping
+    clip_norm: float = 10.0  # clip threshold on the masked upload norm
+    trim: bool = False       # coordinate-wise trimmed-mean aggregation
+    trim_k: int = 0          # static: #extremes trimmed per side
+
+
+# DefenseConfig fields a sweep scenario may vary without recompiling
+SWEEP_VARYING_DEF_FIELDS = ("screen", "clip", "clip_norm", "trim")
+# their program-neutral values (static_signature normalisation)
+DEF_NEUTRAL = {"screen": False, "clip": False, "clip_norm": 0.0,
+               "trim": False}
+
+
+def clip_knob(dfn: DefenseConfig) -> float:
+    """The traced clip value: the threshold when clipping is on, the
+    CLIP_OFF sentinel (predicate never fires) when off."""
+    return float(dfn.clip_norm) if dfn.clip else CLIP_OFF
+
+
+def inject_client_faults(fkey, flat, echo_rows, *, fail_rate,
+                         flip_rate, echo_rate):
+    """Apply per-client faults to the (C, D_up) flat uploads.
+
+    Order: echo replay (the client ships ``echo_rows`` — its previous
+    genuine upload — instead of ``flat``), then sign flip, then device
+    failure (the whole row becomes NaN; failure trumps everything).
+    Each fault draws its own uniform, so rates compose independently.
+    All-zero rates return ``flat`` bitwise (``where`` with a false
+    predicate passes the operand through untouched).
+    """
+    C = flat.shape[0]
+    u = jax.random.uniform(jax.random.fold_in(fkey, 0), (3, C))
+    out = jnp.where((u[0] < echo_rate)[:, None], echo_rows, flat)
+    out = jnp.where((u[1] < flip_rate)[:, None], -out, out)
+    return jnp.where((u[2] < fail_rate)[:, None], jnp.nan, out)
+
+
+def inject_packet_faults(fkey, xp, deliver_mask, *, corrupt_rate,
+                         corrupt_scale, bitflip_rate):
+    """Apply per-packet faults to the (C, P, F) packetised uploads.
+
+    Only DELIVERED packets (``deliver_mask > 0.5``) are touched:
+    corruption models damage in flight, and a packet the channel
+    dropped never reaches the server (so EF-recycled lost packets stay
+    clean — the transport's loss and the transport's corruption are
+    disjoint events per packet).
+
+    Gaussian corruption adds ``corrupt_scale``-stddev white noise over
+    every float of a hit packet; the bit-flip fault XORs ONE uniformly
+    chosen bit of ONE uniformly chosen float (the classic undetected
+    single-bit error — flipping an exponent bit can scale a coordinate
+    by ~2^128, which is what makes screening necessary rather than
+    merely averaging it away). All-zero rates return ``xp`` bitwise.
+    """
+    C, P, F = xp.shape
+    kg = jax.random.fold_in(fkey, 1)
+    u = jax.random.uniform(jax.random.fold_in(kg, 0), (2, C, P))
+    delivered = deliver_mask > 0.5
+    hit_g = (u[0] < corrupt_rate) & delivered
+    noise = corrupt_scale * jax.random.normal(
+        jax.random.fold_in(kg, 1), (C, P, F), jnp.float32)
+    out = jnp.where(hit_g[..., None], xp + noise, xp)
+    hit_b = (u[1] < bitflip_rate) & delivered
+    ub = jax.random.uniform(jax.random.fold_in(kg, 2), (2, C, P))
+    coord = jnp.minimum((ub[0] * F).astype(jnp.int32), F - 1)
+    bit = jnp.minimum((ub[1] * 32).astype(jnp.int32), 31).astype(
+        jnp.uint32)
+    bits = jax.lax.bitcast_convert_type(out.astype(jnp.float32),
+                                        jnp.uint32)
+    flipped = jax.lax.bitcast_convert_type(
+        bits ^ jnp.left_shift(jnp.uint32(1), bit)[..., None],
+        jnp.float32)
+    is_coord = jax.lax.broadcasted_iota(
+        jnp.int32, (C, P, F), 2) == coord[..., None]
+    return jnp.where(hit_b[..., None] & is_coord, flipped, out)

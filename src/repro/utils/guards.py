@@ -1,0 +1,72 @@
+"""Finite-ness guards for host loops and device programs.
+
+The fault model (repro/netsim/faults.py) makes non-finite values a
+first-class, *expected* input — which means a NaN that leaks PAST the
+defenses is a bug worth failing fast on, with the offending leaf named,
+rather than a mystery loss=nan twenty rounds later.
+
+Two entry points, split by where they run:
+
+* ``all_finite_tree(tree)`` — jit-safe: one fused scalar bool reduction
+  over every leaf, usable inside a compiled step (e.g. as a
+  ``lax.cond`` predicate or a logged bit). No host sync.
+* ``assert_finite_tree(tree, name=...)`` — host-side: walks the leaves
+  with the same path naming the checkpoint format uses and raises
+  ``NonFiniteError`` identifying WHICH leaf went bad (path, dtype,
+  #nan/#inf counts) instead of a bare assert.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class NonFiniteError(ValueError):
+    """A pytree leaf contains NaN/Inf (message names the leaf path)."""
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def all_finite_tree(tree: Any) -> jnp.ndarray:
+    """() bool: every float leaf of ``tree`` is finite (jit-safe).
+
+    Integer/bool leaves are skipped (isfinite is undefined on them and
+    they cannot be non-finite anyway). An empty tree is finite.
+    """
+    bits = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        x = jnp.asarray(leaf)
+        if jnp.issubdtype(x.dtype, jnp.floating) \
+                or jnp.issubdtype(x.dtype, jnp.complexfloating):
+            bits.append(jnp.isfinite(x).all())
+    if not bits:
+        return jnp.asarray(True)
+    return jnp.stack(bits).all()
+
+
+def assert_finite_tree(tree: Any, name: str = "tree") -> None:
+    """Host-side fail-fast guard: raise ``NonFiniteError`` naming the
+    first offending leaf (checkpoint-style path) with NaN/Inf counts.
+
+    Materialises the tree on host — call at host-loop cadence (per
+    round / per eval), not inside a compiled step; use
+    ``all_finite_tree`` there.
+    """
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.issubdtype(arr.dtype, np.floating) \
+                and not np.issubdtype(arr.dtype, np.complexfloating):
+            continue
+        if not np.isfinite(arr).all():
+            n_nan = int(np.isnan(arr).sum())
+            n_inf = int(np.isinf(arr).sum())
+            raise NonFiniteError(
+                f"{name}/{_path_str(path)} ({arr.dtype}, "
+                f"shape {arr.shape}) is non-finite: "
+                f"{n_nan} NaN, {n_inf} Inf")

@@ -362,6 +362,119 @@ def test_staleness_weight_semantics():
 
 
 # ---------------------------------------------------------------------------
+# buffer / staleness property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=-10.0, max_value=1e6, width=32),
+       st.floats(min_value=-10.0, max_value=1e6, width=32),
+       st.floats(min_value=0.0, max_value=100.0, width=32))
+def test_staleness_weight_properties(tau1, tau2, alpha):
+    """w(0) = 1 exactly; w is monotone non-increasing in tau (negative
+    tau clamps to 0); finite and in [0, 1] even for extreme alpha
+    (huge discounts underflow to 0.0, never to NaN/inf)."""
+    a = jnp.float32(alpha)
+    assert float(staleness_weight(jnp.float32(0.0), a)) == 1.0
+    lo, hi = sorted((tau1, tau2))
+    w_lo = float(staleness_weight(jnp.float32(lo), a))
+    w_hi = float(staleness_weight(jnp.float32(hi), a))
+    for w in (w_lo, w_hi):
+        assert np.isfinite(w)
+        assert 0.0 <= w <= 1.0
+    assert w_hi <= w_lo + 1e-7
+
+
+def _insert_oracle(exist_due, cand_due, live, k):
+    """Numpy oracle for the eviction rule: stable-argsort of
+    (existing ++ live candidates-as-EMPTY_DUE-when-dead) by due,
+    K earliest kept — existing beats candidates on ties, candidates
+    keep cohort order."""
+    dues = np.concatenate([
+        np.asarray(exist_due, np.float32),
+        np.where(live, np.asarray(cand_due, np.float32), EMPTY_DUE)])
+    order = np.argsort(dues, kind="stable")[:k]
+    return order, dues
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6, width=32),
+                min_size=1, max_size=5),
+       st.lists(st.booleans(), min_size=1, max_size=5))
+def test_buffer_insert_k1_keeps_single_earliest(cand_due, live_bits):
+    """K=1 degenerate buffer: exactly the earliest-due live entry
+    (existing slot wins ties) survives, everything else is evicted."""
+    n = min(len(cand_due), len(live_bits))
+    cand_due, live_bits = cand_due[:n], live_bits[:n]
+    buf = _mkbuf(1, 2, [3.0])
+    cand = (100.0 + jnp.arange(n, dtype=jnp.float32))[:, None] \
+        * jnp.ones((1, 2))
+    out = buffer_insert(buf, cand, jnp.asarray(cand_due, jnp.float32),
+                        jnp.ones(n), jnp.zeros(n),
+                        jnp.asarray(live_bits))
+    order, dues = _insert_oracle([3.0], cand_due, live_bits, 1)
+    assert float(out.due[0]) == dues[order[0]]
+    want_marker = 1.0 if order[0] == 0 else 100.0 + (order[0] - 1)
+    if dues[order[0]] != EMPTY_DUE:
+        assert float(out.vec[0, 0]) == want_marker
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=6),
+       st.floats(min_value=0.0, max_value=100.0, width=32))
+def test_buffer_insert_all_equal_due_ties(k, n_cand, due):
+    """All-equal due times: the stable tie rule fills slots with
+    existing entries first, then candidates in cohort order."""
+    n_exist = min(k, 2)
+    buf = _mkbuf(k, 2, [due] * n_exist)
+    cand = (100.0 + jnp.arange(n_cand, dtype=jnp.float32))[:, None] \
+        * jnp.ones((1, 2))
+    out = buffer_insert(buf, cand,
+                        jnp.full((n_cand,), due, jnp.float32),
+                        jnp.ones(n_cand), jnp.zeros(n_cand),
+                        jnp.ones((n_cand,), bool))
+    markers = [float(i + 1) for i in range(n_exist)] \
+        + [100.0 + j for j in range(n_cand)]
+    got = np.asarray(out.vec[:, 0])
+    n_live = min(k, n_exist + n_cand)
+    np.testing.assert_array_equal(got[:n_live], markers[:n_live])
+    # unfilled slots stay empty
+    np.testing.assert_array_equal(np.asarray(out.due)[n_live:],
+                                  EMPTY_DUE)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.lists(st.floats(min_value=0.0, max_value=1e6, width=32),
+                min_size=1, max_size=6),
+       st.lists(st.floats(min_value=0.0, max_value=1e6, width=32),
+                min_size=0, max_size=3))
+def test_buffer_insert_overflow_eviction_matches_oracle(
+        k, cand_due, exist_due):
+    """Arbitrary overflow: the surviving slots are exactly the stable
+    argsort's K earliest dues, in sorted order, with each slot's
+    payload following its due."""
+    exist_due = exist_due[:k]
+    n = len(cand_due)
+    buf = _mkbuf(k, 2, exist_due)
+    cand = (100.0 + jnp.arange(n, dtype=jnp.float32))[:, None] \
+        * jnp.ones((1, 2))
+    out = buffer_insert(buf, cand, jnp.asarray(cand_due, jnp.float32),
+                        jnp.ones(n), jnp.zeros(n),
+                        jnp.ones((n,), bool))
+    order, dues = _insert_oracle(
+        list(exist_due) + [EMPTY_DUE] * (k - len(exist_due)),
+        cand_due, [True] * n, k)
+    np.testing.assert_array_equal(np.asarray(out.due), dues[order])
+    markers = np.asarray(
+        [float(i + 1) for i in range(len(exist_due))]
+        + [0.0] * (k - len(exist_due))
+        + [100.0 + j for j in range(n)], np.float32)
+    live = dues[order] != EMPTY_DUE
+    np.testing.assert_array_equal(np.asarray(out.vec[:, 0])[live],
+                                  markers[order][live])
+
+
+# ---------------------------------------------------------------------------
 # config refusals
 # ---------------------------------------------------------------------------
 def test_nonsync_requires_deadline_model(data, nets):

@@ -1,0 +1,759 @@
+"""Corruption-tolerant uplink: fault injection + fused robust defense.
+
+* Bit-identity lock: ``faults=FaultConfig()`` (disabled — the default)
+  computes EXACTLY the frozen PR-7 round step
+  (tests/_legacy_engine_v7.py) for fedavg/scaffold/qfedavg, ±TRA,
+  ±error feedback, with the netsim channel/deadline paths on. And
+  ``enabled=True`` with all rates 0 and every defense gate off is
+  bitwise the SAME trajectory — the fault subsystem costs nothing when
+  quiet.
+* One-program grid: a fault-rate × defense grid through ``SweepEngine``
+  compiles to exactly ONE vmap(scan) program and every cell is bitwise
+  identical to the corresponding static single-config engine run.
+* Headline robustness: 10% per-packet Gaussian corruption + 10% NaN
+  device failures on top of 30% bursty Gilbert–Elliott loss — the
+  undefended engine's model goes NON-FINITE; screen+clip+trimmed-mean
+  keeps BOTH the global mean eval loss and the bottom-quartile
+  (worst-clients) eval loss within tolerance of the fault-free run.
+  Fully seeded, deterministic, and all three cells ride one program.
+* Unit semantics: finite-screening quarantines a bad packet exactly AS
+  IF LOST (same debias machinery, all four modes); the norm clip
+  matches the closed form; the trimmed mean matches a numpy oracle;
+  quarantine counts accumulate into the reputation memory and the
+  ``reputation_aware`` policy suppresses offenders; the async arrival
+  buffer refuses quarantined uploads; echo replays are byte-exact
+  copies of the PREVIOUS genuine upload.
+* Kernel parity: the Pallas robust-aggregation kernel (interpret mode)
+  matches the jnp reference bitwise-tolerance across debias modes ×
+  gate settings, NaN/Inf inputs included.
+* Checkpoint integrity: a flipped byte in a saved checkpoint raises
+  ``CheckpointCorruptionError`` naming the damaged leaf.
+"""
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.checkpoint import (CheckpointCorruptionError, load_checkpoint,
+                              save_checkpoint)
+from repro.core.async_agg import AsyncConfig
+from repro.core.mlp import mlp_init, mlp_weighted_loss
+from repro.core.selection import SelectionConfig
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.sweep import SweepEngine
+from repro.core.tra import TRAConfig
+from repro.data.synthetic import generate_synthetic, stage_on_device
+from repro.kernels.robust_agg import ops as robust_ops
+from repro.kernels.robust_agg.ref import masked_trimmed_mean, robust_ref
+from repro.kernels.tra_agg.ops import DEBIAS_MODES
+from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.netsim import (CLIP_OFF, DefenseConfig, FaultConfig,
+                          NetSimConfig, inject_client_faults,
+                          inject_packet_faults)
+from repro.utils.guards import (NonFiniteError, all_finite_tree,
+                                assert_finite_tree)
+from tests._legacy_engine_v7 import make_legacy_v7_round_step
+
+N_CLIENTS = 20
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_synthetic(np.random.default_rng(0),
+                              n_clients=N_CLIENTS, alpha=0.5, beta=0.5)
+
+
+@pytest.fixture(scope="module")
+def nets():
+    from repro.network.trace import ClientNetworks
+    return ClientNetworks(np.linspace(0.5, 20.0, N_CLIENTS),
+                          np.full(N_CLIENTS, 0.05))
+
+
+def _cfg(*, algo="fedavg", tra_on=True, ef=False, lr=0.3, rounds=4,
+         cpr=8, seed=0, debias="group_rate", local_steps=2,
+         batch_size=8, lr_opt=0.1, faults=None, defense=None,
+         policy="uniform", sel_traced=False, srv_mode="sync",
+         buffer_k=8, deadline=True):
+    return FLConfig(
+        algo=algo, n_rounds=rounds, clients_per_round=cpr,
+        local_steps=local_steps, batch_size=batch_size, lr=lr_opt,
+        eval_every=10 ** 6, seed=seed, error_feedback=ef,
+        sel=SelectionConfig(policy=policy, traced=sel_traced),
+        tra=TRAConfig(enabled=tra_on, loss_rate=lr, debias=debias),
+        netsim=NetSimConfig(
+            channel="gilbert_elliott" if tra_on else "iid",
+            burst_len=8.0, deadline=deadline, deadline_s=60.0),
+        faults=faults if faults is not None else FaultConfig(),
+        defense=defense if defense is not None else DefenseConfig(),
+        srv=AsyncConfig(mode=srv_mode, buffer_k=buffer_k))
+
+
+def _vec(params):
+    return np.asarray(ravel_pytree(params)[0])
+
+
+# ---------------------------------------------------------------------------
+# bit-identity locks against the frozen PR-7 step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "qfedavg"])
+@pytest.mark.parametrize("tra_on,ef", [(False, False), (True, True)])
+def test_faults_off_bit_identical_to_legacy_v7(algo, tra_on, ef, data,
+                                               nets):
+    """The default ``FaultConfig()`` computes exactly the frozen PR-7
+    step — netsim channel and deadline paths included."""
+    cfg = _cfg(algo=algo, tra_on=tra_on, ef=ef, deadline=tra_on)
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed))
+
+    state, logs = eng.run_block(eng.init_state(params0), 0, cfg.n_rounds)
+
+    legacy = jax.jit(make_legacy_v7_round_step(cfg, eng.cohort))
+    lstate = eng.init_state(params0)
+    lids = []
+    for t in range(cfg.n_rounds):
+        lstate, out = legacy(eng.ctx, lstate, jnp.int32(t))
+        lids.append(np.asarray(out["ids"]))
+
+    np.testing.assert_array_equal(logs["ids"], np.asarray(lids))
+    np.testing.assert_array_equal(_vec(state.params),
+                                  _vec(lstate.params))
+    np.testing.assert_array_equal(np.asarray(state.ef_mem),
+                                  np.asarray(lstate.ef_mem))
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "qfedavg"])
+def test_faults_enabled_but_neutral_is_bitwise_off(algo, data, nets):
+    """``enabled=True`` with zero rates and every defense gate off is
+    the SAME trajectory: the injectors multiply by exactly 1.0 / gate
+    through ``where`` on false predicates, and the robust uplink's
+    off-gate expressions reduce to the undefended math (unit-level
+    bitwise — see test_screen_quarantines_exactly_as_if_lost).
+
+    Bit-for-bit at the engine level for fedavg/scaffold.  qfedavg+EF
+    is the one cell where XLA's cross-program reduction fusion bites:
+    the neutral program gives ``ssq`` an extra consumer (the clip
+    predicate), the legacy program doesn't, and XLA reassociates the
+    squared-norm reduction differently (~1e-8 relative; vanishes the
+    moment either program materialises the intermediate).  The ops
+    layer IS bitwise there — so that cell asserts tight allclose and
+    the bitwise engine locks live on the cells XLA can honour."""
+    p0 = mlp_init(jax.random.PRNGKey(0))
+    outs = []
+    for fl in (FaultConfig(), FaultConfig(enabled=True)):
+        cfg = _cfg(algo=algo, ef=True, faults=fl)
+        srv = FederatedServer(cfg, data, nets)
+        st, logs = srv.engine.run_block(srv.engine.init_state(p0), 0,
+                                        cfg.n_rounds)
+        outs.append((st, logs))
+    if algo == "qfedavg":
+        np.testing.assert_allclose(_vec(outs[0][0].params),
+                                   _vec(outs[1][0].params),
+                                   rtol=0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(outs[0][1]["loss"]),
+                                   np.asarray(outs[1][1]["loss"]),
+                                   rtol=0, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(_vec(outs[0][0].params),
+                                      _vec(outs[1][0].params))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]["loss"]),
+                                      np.asarray(outs[1][1]["loss"]))
+    np.testing.assert_array_equal(np.asarray(outs[0][0].ef_mem),
+                                  np.asarray(outs[1][0].ef_mem))
+    # the quiet fault path also reports zero quarantines
+    np.testing.assert_array_equal(
+        np.asarray(outs[1][1]["quarantine"]), 0.0)
+
+
+def test_neutral_lock_across_debias_modes(data, nets):
+    """The off-gate reduction holds for every debias mode the screen
+    composes with (the quarantine-as-lost contract is per mode)."""
+    p0 = mlp_init(jax.random.PRNGKey(0))
+    for debias in DEBIAS_MODES:
+        outs = []
+        for fl in (FaultConfig(), FaultConfig(enabled=True)):
+            cfg = _cfg(debias=debias, rounds=2, faults=fl)
+            srv = FederatedServer(cfg, data, nets)
+            st, _ = srv.engine.run_block(srv.engine.init_state(p0), 0, 2)
+            outs.append(_vec(st.params))
+        np.testing.assert_array_equal(outs[0], outs[1],
+                                      err_msg=f"debias={debias}")
+
+
+# ---------------------------------------------------------------------------
+# one-program fault-rate × defense grid, bitwise cells
+# ---------------------------------------------------------------------------
+def test_fault_grid_is_one_program_with_bitwise_cells(data, nets):
+    """S=6 cells spanning no-fault / corruption / NaN-failure /
+    byzantine × defense combinations: ONE compiled program, every cell
+    bitwise equal to its static single-config run."""
+    R = 4
+    F = lambda **kw: FaultConfig(enabled=True, **kw)  # noqa: E731
+    grid = [
+        (F(), DefenseConfig(trim_k=1)),
+        (F(corrupt_rate=0.1, corrupt_scale=5.0), DefenseConfig(trim_k=1)),
+        (F(corrupt_rate=0.1, corrupt_scale=5.0),
+         DefenseConfig(screen=True, trim_k=1)),
+        (F(fail_rate=0.2),
+         DefenseConfig(screen=True, clip=True, clip_norm=5.0, trim_k=1)),
+        (F(flip_rate=0.2), DefenseConfig(trim=True, trim_k=1)),
+        (F(corrupt_rate=0.1, bitflip_rate=0.05, fail_rate=0.1),
+         DefenseConfig(screen=True, clip=True, clip_norm=5.0,
+                       trim=True, trim_k=1)),
+    ]
+    cfgs = [_cfg(ef=True, rounds=R, seed=0, faults=fl, defense=df)
+            for fl, df in grid]
+    eng = SweepEngine.from_configs(cfgs, data, nets)
+    states, logs = eng.run_block(eng.init_states(), 0, R)
+    assert eng._block._cache_size() == 1
+
+    for i, c in enumerate(cfgs):
+        srv = FederatedServer(c, data, nets)
+        st = srv.engine.init_state(mlp_init(jax.random.PRNGKey(0)))
+        st, lg = srv.engine.run_block(st, 0, R)
+        np.testing.assert_array_equal(
+            _vec(st.params),
+            _vec(jax.tree.map(lambda x: x[i], states.params)),
+            err_msg=f"cell {i}")
+        np.testing.assert_array_equal(
+            np.asarray(lg["quarantine"]),
+            np.asarray(logs["quarantine"][i]), err_msg=f"cell {i}")
+
+
+def test_grid_refuses_mixed_static_structure(data, nets):
+    """faults.enabled and defense.trim_k are program structure — a grid
+    mixing them must be refused with an actionable message."""
+    cfgs = [_cfg(faults=FaultConfig(enabled=True)), _cfg()]
+    with pytest.raises(ValueError, match="static"):
+        SweepEngine.from_configs(cfgs, data, nets)
+
+
+# ---------------------------------------------------------------------------
+# headline: defended survives what kills the undefended engine
+# ---------------------------------------------------------------------------
+def _per_client_losses(params, data):
+    dd = stage_on_device(data)
+    L = min(64, dd.train_x.shape[1])
+    msk = (np.arange(L)[None, :]
+           < np.asarray(dd.counts)[:, None]).astype(np.float32)
+    return np.asarray(jax.vmap(mlp_weighted_loss, in_axes=(None, 0, 0, 0))(
+        params, dd.train_x[:, :L], dd.train_y[:, :L], jnp.asarray(msk)))
+
+
+def test_defense_recovers_faulted_run_where_undefended_diverges(data,
+                                                                nets):
+    """10% per-packet Gaussian corruption + 10% NaN device failures on
+    30% bursty GE loss: the undefended model goes non-finite; with
+    screen+clip+trim the global mean AND the bottom-quartile eval loss
+    stay within tolerance of the fault-free run. All three cells are
+    traced points of ONE compiled program (the defense grid axis)."""
+    R = 40
+    faults = FaultConfig(enabled=True, corrupt_rate=0.1,
+                         corrupt_scale=0.5, fail_rate=0.1)
+    defense = DefenseConfig(screen=True, clip=True, clip_norm=20.0,
+                            trim=True, trim_k=2)
+    mk = lambda fl, df: _cfg(  # noqa: E731
+        rounds=R, cpr=12, local_steps=4, batch_size=16, seed=1,
+        faults=fl, defense=df)
+    cfgs = [mk(FaultConfig(enabled=True), DefenseConfig(trim_k=2)),
+            mk(faults, DefenseConfig(trim_k=2)),
+            mk(faults, defense)]
+    eng = SweepEngine.from_configs(cfgs, data, nets)
+    states, logs = eng.run_block(eng.init_states(), 0, R)
+    assert eng._block._cache_size() == 1
+
+    l_clean, l_undef, l_def = (
+        _per_client_losses(jax.tree.map(lambda x: x[i], states.params),
+                           data) for i in range(3))
+    q = N_CLIENTS // 4
+    bq = lambda l: np.sort(l)[-q:].mean()  # noqa: E731
+
+    # undefended: the NaN uploads poison the model
+    assert not np.isfinite(l_undef).all()
+    # defended: finite, and within tolerance of fault-free — globally
+    # AND for the worst quartile of clients (robustness must not be
+    # bought by sacrificing the tail)
+    assert np.isfinite(l_def).all()
+    assert l_def.mean() < l_clean.mean() + 0.5
+    assert bq(l_def) < bq(l_clean) + 0.5
+    # and the defense actually fired (packets were quarantined)
+    assert np.asarray(logs["quarantine"][2]).sum() > 0
+    # while the clean cell never quarantined anything
+    assert np.asarray(logs["quarantine"][0]).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# unit semantics: screen ≡ as-if-lost, clip closed form, trim oracle
+# ---------------------------------------------------------------------------
+def _rand_uplink(rng, C=6, P=5, F=8, d_up=37):
+    xp = rng.normal(size=(C, P, F)).astype(np.float32)
+    m = (rng.random((C, P)) < 0.7).astype(np.float32)
+    w = rng.integers(10, 100, C).astype(np.float32)
+    suff = (rng.random(C) < 0.8).astype(np.float32)
+    return xp, m, w, suff, d_up
+
+
+@pytest.mark.parametrize("mode", DEBIAS_MODES)
+def test_screen_quarantines_exactly_as_if_lost(mode):
+    """A non-finite packet under the screen produces bit-for-bit the
+    aggregate of the same uplink with that packet REMOVED FROM THE
+    MASK — quarantine rides the identical debias machinery as loss,
+    for every debias mode."""
+    rng = np.random.default_rng(3)
+    xp, m, w, suff, d_up = _rand_uplink(rng)
+    bad = [(0, 1), (2, 4), (5, 0)]
+    xq = xp.copy()
+    for c, p in bad:
+        xq[c, p, 3] = np.nan if (c + p) % 2 else np.inf
+    m_lost = m.copy()
+    for c, p in bad:
+        m_lost[c, p] = 0.0
+
+    kw = dict(mode=mode, d_up=d_up, sufficient=jnp.asarray(suff),
+              loss_rate=jnp.float32(0.3), want_ssq=True)
+    # defended view of the corrupted uplink
+    rob = robust_ops.robust_uplink_round(
+        jnp.asarray(xq), jnp.asarray(m), jnp.asarray(w),
+        screen=jnp.float32(1.0), clip_norm=jnp.float32(CLIP_OFF),
+        trim_gate=jnp.float32(0.0), **kw)
+    # undefended view of the clean uplink with those packets lost
+    kept = None
+    if mode == "per_client_rate":
+        P, F = xp.shape[1], xp.shape[2]
+        pad = P * F - d_up
+        pcnt = np.full(P, F, np.float32)
+        pcnt[-1] = F - pad
+        kept = jnp.asarray((m_lost @ pcnt) / d_up)
+    agg, _, ssq = uplink_ops.uplink_round(
+        jnp.asarray(xp), jnp.asarray(m_lost), jnp.asarray(w),
+        kept=kept, impl="ref", **kw)
+
+    np.testing.assert_array_equal(np.asarray(rob.agg), np.asarray(agg))
+    np.testing.assert_array_equal(np.asarray(rob.ssq), np.asarray(ssq))
+    # quarantine counted each bad delivered packet exactly once
+    want_q = np.zeros(xp.shape[0], np.float32)
+    for c, p in bad:
+        want_q[c] += m[c, p]
+    np.testing.assert_array_equal(np.asarray(rob.qcnt), want_q)
+
+
+def test_clip_matches_closed_form():
+    """s_clip = clip/||x||_masked when over threshold, exactly 1.0
+    under — and the clipped aggregate equals the manually scaled one."""
+    rng = np.random.default_rng(5)
+    xp, m, w, suff, d_up = _rand_uplink(rng)
+    xp[0] *= 40.0  # client 0 far over everyone else's norm
+    # threshold between the pack and the outlier: client 0 (and only
+    # the similarly-inflated tail, if any) is over
+    masked = xp * np.repeat(m, xp.shape[2], axis=1).reshape(xp.shape)
+    cn = float(1.2 * np.sqrt((masked[1:] ** 2).sum(axis=(1, 2))).max())
+    kw = dict(mode="none", d_up=d_up, sufficient=jnp.asarray(suff),
+              loss_rate=jnp.float32(0.3))
+    rob = robust_ops.robust_uplink_round(
+        jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+        screen=jnp.float32(0.0), clip_norm=jnp.float32(cn),
+        trim_gate=jnp.float32(0.0), want_ssq=True, **kw)
+    norms = np.sqrt(np.asarray(rob.ssq))
+    s = np.asarray(rob.s_clip)
+    over = norms > cn
+    assert over[0] and not over.all()
+    np.testing.assert_allclose(s[over], cn / norms[over], rtol=1e-6)
+    np.testing.assert_array_equal(s[~over], 1.0)
+    # clipped aggregate == aggregate of pre-scaled uploads (un-clipped)
+    xs = xp * s[:, None, None]
+    base = robust_ops.robust_uplink_round(
+        jnp.asarray(xs), jnp.asarray(m), jnp.asarray(w),
+        screen=jnp.float32(0.0), clip_norm=jnp.float32(CLIP_OFF),
+        trim_gate=jnp.float32(0.0), **kw)
+    np.testing.assert_allclose(np.asarray(rob.agg),
+                               np.asarray(base.agg), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_trimmed_mean_matches_numpy_oracle():
+    """masked_trimmed_mean == per-coordinate numpy: drop the k largest
+    and k smallest VALID values, average the rest; fall back to the
+    plain masked mean when fewer than 2k+1 valid."""
+    rng = np.random.default_rng(11)
+    C, P, F, k = 7, 3, 4, 2
+    y = rng.normal(size=(C, P, F)).astype(np.float32) * 10
+    valid = (rng.random((C, P)) < 0.6).astype(np.float32)
+    got = np.asarray(masked_trimmed_mean(
+        jnp.asarray(y), jnp.asarray(valid), k))
+    want = np.zeros((P, F), np.float32)
+    for p in range(P):
+        rows = [c for c in range(C) if valid[c, p] > 0]
+        for f in range(F):
+            vals = np.sort(np.array([y[c, p, f] for c in rows]))
+            if len(vals) > 2 * k:
+                want[p, f] = vals[k:-k].mean()
+            elif len(vals):
+                want[p, f] = vals.mean()
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_trim_defeats_sign_flip_byzantine():
+    """A minority of sign-flipped clients moves the plain mean but NOT
+    the trimmed mean (their coordinates are the extremes)."""
+    rng = np.random.default_rng(9)
+    C, P, F = 9, 4, 16
+    sig = rng.normal(size=(P, F)).astype(np.float32)
+    xp = sig[None] + rng.normal(size=(C, P, F)).astype(np.float32) * .05
+    xp[:2] = -3.0 * sig[None]  # two byzantine clients
+    m = np.ones((C, P), np.float32)
+    w = np.ones(C, np.float32)
+    kw = dict(mode="none", d_up=P * F, want_ssq=False)
+
+    def agg(trg):
+        return np.asarray(robust_ops.robust_uplink_round(
+            jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+            screen=jnp.float32(0.0), clip_norm=jnp.float32(CLIP_OFF),
+            trim_gate=jnp.float32(trg), trim_k=2, **kw).agg)
+
+    truth = sig.reshape(-1)
+    err_mean = np.linalg.norm(agg(0.0) - truth)
+    err_trim = np.linalg.norm(agg(1.0) - truth)
+    assert err_trim < 0.2 * err_mean
+
+
+def test_trim_validity_excludes_zero_weight_clients():
+    """Zero-weight clients (async late arrivals) must not vote in the
+    trimmed mean: their rows are excluded by the w>0 validity bit."""
+    rng = np.random.default_rng(13)
+    C, P, F = 5, 2, 8
+    xp = rng.normal(size=(C, P, F)).astype(np.float32)
+    xp[4] = 1e3  # huge — but weight 0
+    m = np.ones((C, P), np.float32)
+    w = np.array([1, 1, 1, 1, 0], np.float32)
+    kw = dict(mode="none", d_up=P * F)
+    with_w0 = robust_ops.robust_uplink_round(
+        jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+        screen=jnp.float32(0.0), clip_norm=jnp.float32(CLIP_OFF),
+        trim_gate=jnp.float32(1.0), trim_k=1, **kw)
+    dropped = robust_ops.robust_uplink_round(
+        jnp.asarray(xp[:4]), jnp.asarray(m[:4]), jnp.asarray(w[:4]),
+        screen=jnp.float32(0.0), clip_norm=jnp.float32(CLIP_OFF),
+        trim_gate=jnp.float32(1.0), trim_k=1, **kw)
+    np.testing.assert_allclose(np.asarray(with_w0.agg),
+                               np.asarray(dropped.agg), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# client-fault injector semantics
+# ---------------------------------------------------------------------------
+def test_client_fault_injectors():
+    """Echo replays the PREVIOUS genuine row byte-exact; sign flip is
+    exact negation; device failure is all-NaN; zero rates are identity
+    (same bits, not just close)."""
+    key = jax.random.PRNGKey(1)
+    C, D = 6, 17
+    rng = np.random.default_rng(2)
+    flat = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    echo = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+
+    out = inject_client_faults(key, flat, echo, fail_rate=jnp.float32(0),
+                               flip_rate=jnp.float32(0),
+                               echo_rate=jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(flat))
+
+    for rate_name, want in (("fail_rate", None),
+                            ("flip_rate", -np.asarray(flat)),
+                            ("echo_rate", np.asarray(echo))):
+        rates = {"fail_rate": jnp.float32(0),
+                 "flip_rate": jnp.float32(0),
+                 "echo_rate": jnp.float32(0)}
+        rates[rate_name] = jnp.float32(1.0)
+        out = np.asarray(inject_client_faults(key, flat, echo, **rates))
+        if want is None:
+            assert np.isnan(out).all()
+        else:
+            np.testing.assert_array_equal(out, want)
+
+
+def test_packet_fault_injector_gates_on_delivery():
+    """Packet corruption only touches DELIVERED packets — lost packets
+    pass through bit-exact (they never reach the server; corrupting
+    them would silently poison the EF residue)."""
+    key = jax.random.PRNGKey(4)
+    C, P, F = 4, 6, 8
+    rng = np.random.default_rng(6)
+    xp = jnp.asarray(rng.normal(size=(C, P, F)).astype(np.float32))
+    mask = jnp.asarray((rng.random((C, P)) < 0.5).astype(np.float32))
+    out = np.asarray(inject_packet_faults(
+        key, xp, mask, corrupt_rate=jnp.float32(1.0),
+        corrupt_scale=jnp.float32(3.0), bitflip_rate=jnp.float32(0)))
+    lost = np.asarray(mask) == 0.0
+    np.testing.assert_array_equal(out[lost], np.asarray(xp)[lost])
+    assert (out[~lost] != np.asarray(xp)[~lost]).any()
+
+
+def test_bitflip_changes_exactly_one_coordinate_per_hit_packet():
+    key = jax.random.PRNGKey(8)
+    C, P, F = 3, 4, 16
+    rng = np.random.default_rng(7)
+    xp = jnp.asarray(rng.normal(size=(C, P, F)).astype(np.float32))
+    mask = jnp.ones((C, P), jnp.float32)
+    out = np.asarray(inject_packet_faults(
+        key, xp, mask, corrupt_rate=jnp.float32(0),
+        corrupt_scale=jnp.float32(1.0), bitflip_rate=jnp.float32(1.0)))
+    diff = (out != np.asarray(xp)).sum(axis=-1)
+    np.testing.assert_array_equal(diff, 1)  # one coord per packet
+
+
+# ---------------------------------------------------------------------------
+# reputation feedback loop
+# ---------------------------------------------------------------------------
+def test_reputation_accumulates_and_suppresses_selection(data, nets):
+    """Two halves of the feedback loop. (1) Accumulation: NaN-failing
+    clients build reputation (their quarantined-packet fraction rides
+    ``EngineState.rep_mem``). (2) Suppression: a seeded reputation
+    memory makes the reputation_aware policy pick the offenders far
+    less often than the clean clients. (Fault draws are iid per round,
+    so a live run cannot separate cause from effect — being selected
+    is what EXPOSES a client to quarantine — hence the seeded half.)"""
+    faults = FaultConfig(enabled=True, fail_rate=0.5)
+    cfg = _cfg(rounds=6, cpr=6, seed=2, faults=faults,
+               defense=DefenseConfig(screen=True),
+               policy="reputation_aware")
+    srv = FederatedServer(cfg, data, nets)
+    st = srv.engine.init_state(mlp_init(jax.random.PRNGKey(2)))
+    st, _ = srv.engine.run_block(st, 0, 6)
+    rep = np.asarray(st.rep_mem)
+    assert rep.shape == (N_CLIENTS,) and (rep > 0).any()
+
+    # suppression, isolated from accumulation: quiet faults (zero
+    # rates), reputation pinned high on a fixed offender subset
+    quiet = _cfg(rounds=30, cpr=6, seed=3,
+                 faults=FaultConfig(enabled=True),
+                 defense=DefenseConfig(screen=True),
+                 policy="reputation_aware")
+    srv2 = FederatedServer(quiet, data, nets)
+    st2 = srv2.engine.init_state(mlp_init(jax.random.PRNGKey(3)))
+    offenders = np.zeros(N_CLIENTS, bool)
+    offenders[:5] = True
+    st2 = st2._replace(rep_mem=jnp.where(jnp.asarray(offenders),
+                                         50.0, 0.0).astype(jnp.float32))
+    st2, logs = srv2.engine.run_block(st2, 0, 30)
+    # zero fault rates: the seeded memory is untouched by the run
+    np.testing.assert_array_equal(np.asarray(st2.rep_mem)[offenders],
+                                  50.0)
+    counts = np.bincount(np.asarray(logs["ids"]).ravel(),
+                         minlength=N_CLIENTS)
+    assert counts[offenders].mean() < 0.5 * counts[~offenders].mean()
+
+
+def test_reputation_aware_requires_faults(data, nets):
+    cfg = _cfg(policy="reputation_aware")
+    with pytest.raises(ValueError, match="reputation"):
+        FederatedServer(cfg, data, nets).engine.run_single(
+            FederatedServer(cfg, data, nets).engine.init_state(
+                mlp_init(jax.random.PRNGKey(0))), 0)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+def test_defense_requires_fault_model(data, nets):
+    cfg = _cfg(defense=DefenseConfig(screen=True))
+    with pytest.raises(ValueError, match="faults.enabled"):
+        FederatedServer(cfg, data, nets)
+
+
+def test_trim_gate_requires_static_k(data, nets):
+    cfg = _cfg(faults=FaultConfig(enabled=True),
+               defense=DefenseConfig(trim=True, trim_k=0))
+    with pytest.raises(ValueError, match="trim_k"):
+        FederatedServer(cfg, data, nets)
+
+
+def test_trim_refuses_per_coord_count(data, nets):
+    cfg = _cfg(debias="per_coord_count",
+               faults=FaultConfig(enabled=True),
+               defense=DefenseConfig(trim=True, trim_k=1))
+    with pytest.raises(ValueError, match="per_coord_count"):
+        FederatedServer(cfg, data, nets)
+
+
+# ---------------------------------------------------------------------------
+# async buffer refuses quarantined arrivals
+# ---------------------------------------------------------------------------
+def test_buffer_refuses_quarantined_arrivals(data, nets):
+    """Async mode + always-failing clients + screen: nothing those
+    clients upload may enter the arrival buffer (their packets are
+    quarantined, so buffering them would launder the fault past the
+    defense), and the run stays finite."""
+    faults = FaultConfig(enabled=True, fail_rate=1.0)
+    base = dict(
+        algo="fedavg", n_rounds=6, clients_per_round=6, local_steps=2,
+        batch_size=8, lr=0.1, eval_every=10 ** 6, seed=3,
+        tra=TRAConfig(enabled=True, loss_rate=0.3, debias="group_rate"),
+        netsim=NetSimConfig(channel="gilbert_elliott", burst_len=8.0,
+                            deadline=True, deadline_s=0.1),
+        srv=AsyncConfig(mode="async", buffer_k=8))
+    cfg = FLConfig(faults=faults, defense=DefenseConfig(screen=True),
+                   **base)
+    srv = FederatedServer(cfg, data, nets)
+    st = srv.engine.init_state(mlp_init(jax.random.PRNGKey(3)))
+    st, _ = srv.engine.run_block(st, 0, 6)
+    # every upload NaN + screen on: buffer must stay empty and the
+    # model must remain finite (and untouched — every packet of every
+    # client was quarantined)
+    assert np.all(np.asarray(st.buf.w) == 0.0)
+    assert np.isfinite(_vec(st.params)).all()
+    # undefended async: the NaN uploads reach the buffer/model
+    cfg_u = FLConfig(faults=faults, defense=DefenseConfig(), **base)
+    srv_u = FederatedServer(cfg_u, data, nets)
+    st_u = srv_u.engine.init_state(mlp_init(jax.random.PRNGKey(3)))
+    st_u, _ = srv_u.engine.run_block(st_u, 0, 6)
+    assert not np.isfinite(_vec(st_u.params)).all()
+
+
+# ---------------------------------------------------------------------------
+# kernel parity (interpret mode; TPU CI compiles the same grid)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", DEBIAS_MODES)
+@pytest.mark.parametrize("gates", [(0.0, CLIP_OFF, 0.0),
+                                   (1.0, 5.0, 1.0)])
+def test_robust_kernel_matches_ref(mode, gates):
+    scr, cn, trg = gates
+    trim_k = 0 if mode == "per_coord_count" else 1
+    rng = np.random.default_rng(17)
+    C, P, F, d_up = 5, 4, 8, 29
+    xp = rng.normal(size=(C, P, F)).astype(np.float32)
+    xp[1, 2, 3] = np.nan
+    xp[3, 0, 0] = np.inf
+    m = (rng.random((C, P)) < 0.7).astype(np.float32)
+    w = rng.random(C).astype(np.float32)
+    w[4] = 0.0
+    ef = rng.normal(size=(C, d_up)).astype(np.float32)
+    suff = (rng.random(C) < 0.8).astype(np.float32)
+    kw = dict(mode=mode, d_up=d_up, screen=jnp.float32(scr),
+              clip_norm=jnp.float32(cn), trim_gate=jnp.float32(trg),
+              trim_k=trim_k, ef_rows=jnp.asarray(ef),
+              sufficient=jnp.asarray(suff),
+              loss_rate=jnp.float32(0.3), want_ssq=True)
+    r = robust_ops.robust_uplink_round(
+        jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+        impl="ref", **kw)
+    k = robust_ops.robust_uplink_round(
+        jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+        impl="kernel", interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(r.agg), np.asarray(k.agg),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(r.ef_rows),
+                               np.asarray(k.ef_rows),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_robust_kernel_batched_matches_loop():
+    """vmap over scenarios hits the batched grid and matches S separate
+    single-scenario calls (the sweep-engine dispatch path)."""
+    rng = np.random.default_rng(23)
+    S, C, P, F, d_up = 3, 4, 4, 8, 32
+    xp = rng.normal(size=(S, C, P, F)).astype(np.float32)
+    xp[0, 1, 1, 1] = np.nan
+    m = (rng.random((S, C, P)) < 0.7).astype(np.float32)
+    w = rng.random((S, C)).astype(np.float32)
+    scr = np.array([1.0, 0.0, 1.0], np.float32)
+    cn = np.array([5.0, CLIP_OFF, CLIP_OFF], np.float32)
+    trg = np.array([0.0, 0.0, 1.0], np.float32)
+
+    def one(i):
+        return robust_ops.robust_uplink_round(
+            jnp.asarray(xp[i]), jnp.asarray(m[i]), jnp.asarray(w[i]),
+            mode="none", d_up=d_up, screen=jnp.float32(scr[i]),
+            clip_norm=jnp.float32(cn[i]), trim_gate=jnp.float32(trg[i]),
+            trim_k=1, impl="kernel", interpret=True).agg
+
+    batched = jax.vmap(
+        lambda x, mm, ww, s, c, t: robust_ops.robust_uplink_round(
+            x, mm, ww, mode="none", d_up=d_up, screen=s, clip_norm=c,
+            trim_gate=t, trim_k=1, impl="kernel", interpret=True).agg
+    )(jnp.asarray(xp), jnp.asarray(m), jnp.asarray(w),
+      jnp.asarray(scr), jnp.asarray(cn), jnp.asarray(trg))
+    for i in range(S):
+        np.testing.assert_allclose(np.asarray(batched[i]),
+                                   np.asarray(one(i)), rtol=1e-6,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# guards + checkpoint integrity satellites
+# ---------------------------------------------------------------------------
+def test_guards_flag_the_offending_leaf():
+    tree = {"a": jnp.ones(3), "b": {"c": jnp.array([1.0, np.nan]),
+                                    "n": jnp.arange(3)}}
+    assert not bool(all_finite_tree(tree))
+    with pytest.raises(NonFiniteError, match=r"state/b/c.*1 NaN"):
+        assert_finite_tree(tree, name="state")
+    ok = {"a": jnp.ones(3), "i": jnp.arange(5)}
+    assert bool(all_finite_tree(ok))
+    assert_finite_tree(ok)  # no raise
+    assert bool(all_finite_tree({}))  # empty tree is finite
+    assert bool(jax.jit(all_finite_tree)({"x": jnp.ones(2)}))
+
+
+def test_checkpoint_byte_flip_raises_corruption_error(tmp_path):
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "b": np.ones(8, np.float32)}
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree, step=7)
+    # roundtrip intact
+    like = jax.tree.map(jnp.asarray, tree)
+    got, step = load_checkpoint(path, like)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+
+    # flip one payload byte (past the zip headers, inside leaf data)
+    raw = bytearray(open(path, "rb").read())
+    # find the float payload of "w" (2.0f == 0x40000000 little-endian)
+    needle = np.float32(2.0).tobytes() + np.float32(3.0).tobytes()
+    i = bytes(raw).find(needle)
+    assert i > 0
+    raw[i] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointCorruptionError):
+        load_checkpoint(path, like)
+
+
+def test_checkpoint_without_crc_still_loads(tmp_path):
+    """Back-compat: pre-checksum checkpoints (no __crc__ keys) load
+    without verification rather than erroring."""
+    tree = {"w": np.ones((4, 4), np.float32)}
+    path = str(tmp_path / "old.npz")
+    np.savez(path, **{"w": tree["w"], "__step__": np.asarray(3)})
+    got, step = load_checkpoint(path, jax.tree.map(jnp.asarray, tree))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+
+
+def test_engine_state_checkpoint_roundtrips_fault_memories(data, nets):
+    """echo/reputation memories ride EngineState through save/load and
+    the resumed trajectory is bit-identical to the uninterrupted one."""
+    faults = FaultConfig(enabled=True, fail_rate=0.3)
+    cfg = _cfg(rounds=6, seed=4, faults=faults,
+               defense=DefenseConfig(screen=True),
+               policy="reputation_aware")
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    p0 = mlp_init(jax.random.PRNGKey(4))
+    st_full, _ = eng.run_block(eng.init_state(p0), 0, 6)
+
+    st3, _ = eng.run_block(eng.init_state(p0), 0, 3)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        pth = save_checkpoint(d + "/st.npz", st3, step=3)
+        st3r, step = load_checkpoint(pth, st3)
+    assert step == 3
+    st_res, _ = eng.run_block(st3r, 3, 3)
+    np.testing.assert_array_equal(_vec(st_full.params),
+                                  _vec(st_res.params))
+    np.testing.assert_array_equal(np.asarray(st_full.rep_mem),
+                                  np.asarray(st_res.rep_mem))
+    np.testing.assert_array_equal(np.asarray(st_full.echo_mem),
+                                  np.asarray(st_res.echo_mem))

@@ -160,7 +160,9 @@ def _score_inputs(rng, n=12):
                 channel=jnp.asarray((rng.random(n) < 0.4)
                                     .astype(np.int32)),
                 stale_mem=jnp.asarray(rng.integers(0, 5, n)
-                                      .astype(np.float32)))
+                                      .astype(np.float32)),
+                rep_mem=jnp.asarray(rng.integers(0, 8, n)
+                                    .astype(np.float32)))
 
 
 @pytest.mark.parametrize("policy", POLICIES)

@@ -88,6 +88,31 @@ def main() -> None:
             if ef_rows is not None:
                 _check(tag + "/ef", ek, er, rtol=0, atol=0)
 
+    # robust_agg (defended uplink: screen/clip/trim, injected NaN) ---------
+    from repro.kernels.robust_agg.ops import robust_uplink_round
+    xbad = np.asarray(xp).copy()
+    xbad[0, 1, 3] = np.nan          # delivered-packet device damage
+    xbad[2, 5, 0] = np.inf
+    xbad = jnp.asarray(xbad)
+    for mode in DEBIAS_MODES:
+        for screen, trim in ((0.0, 0.0), (1.0, 0.0), (1.0, 1.0)):
+            if trim > 0 and mode == "per_coord_count":
+                continue            # trim refuses per-coord denominators
+            kw = dict(mode=mode, d_up=D, ef_rows=ef, sufficient=suff,
+                      loss_rate=jnp.float32(0.3), want_ssq=True,
+                      screen=jnp.float32(screen),
+                      clip_norm=jnp.float32(8.0),
+                      trim_gate=jnp.float32(trim),
+                      trim_k=1 if trim > 0 else 0)
+            rk = robust_uplink_round(xbad, m, w, impl="kernel",
+                                     interpret=True, **kw)
+            rr = robust_uplink_round(xbad, m, w, impl="ref", **kw)
+            tag = (f"robust_agg/{mode}"
+                   f"{'+screen' if screen else ''}"
+                   f"{'+trim' if trim else ''}")
+            _check(tag + "/agg", rk.agg, rr.agg)
+            _check(tag + "/ef", rk.ef_rows, rr.ef_rows, rtol=0, atol=0)
+
     # netsim_mask (Gilbert-Elliott recurrence, exact parity) ---------------
     from repro.kernels.netsim_mask.ops import ge_packet_mask
     from repro.netsim.channel import ge_transition_probs
