@@ -26,7 +26,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.core.async_agg import MODES, AsyncConfig
 from repro.core.selection import SelectionConfig
 from repro.core.server import FLConfig
@@ -108,18 +108,18 @@ def server_mode_grid():
 
     sync_share = per_mode["sync"]["slow_quartile_arrival_share"]
     async_share = per_mode["async"]["slow_quartile_arrival_share"]
-    payload = {
-        "grid": {"modes": list(MODES), "loss_rates": LOSS_RATES,
-                 "scenarios": S, "rounds": ROUNDS,
-                 "n_clients": N_CLIENTS, "cohort": CPR,
-                 "deadline_s": DEADLINE_S, "buffer_k": BUFFER_K},
-        "sweep_seconds": sweep,
-        "sweep_scenarios_per_sec": S / sweep,
-        "sweep_compiled_programs": n_compiled,
-        "one_compile_for_grid": n_compiled in (1, -1),
-        "per_mode": per_mode,
-        "robustness_margin_slow_quartile": async_share - sync_share,
-        "honesty": {
+    emit("BENCH_async", 1e6 * sweep / (S * ROUNDS),
+         f"mode×loss grid S{S} in ONE program "
+         f"({S / sweep:.2f} scen/s); slow-quartile arrival share "
+         f"sync={sync_share:.2f} vs async={async_share:.2f}")
+    write_bench(
+        "BENCH_async",
+        config={"modes": list(MODES), "loss_rates": LOSS_RATES,
+                "scenarios": S, "rounds": ROUNDS,
+                "n_clients": N_CLIENTS, "cohort": CPR,
+                "deadline_s": DEADLINE_S, "buffer_k": BUFFER_K},
+        cells=per_mode,
+        honesty={
             "backend": jax.default_backend(),
             "note": "Single-CPU timing: scenarios/sec measures vmap "
                     "dispatch amortization across the mode family, not "
@@ -128,12 +128,13 @@ def server_mode_grid():
                     "into each cell, which is the price of one program "
                     "for the whole grid.",
         },
-    }
-    emit("BENCH_async", 1e6 * sweep / (S * ROUNDS),
-         f"mode×loss grid S{S} in ONE program "
-         f"({S / sweep:.2f} scen/s); slow-quartile arrival share "
-         f"sync={sync_share:.2f} vs async={async_share:.2f}",
-         payload)
+        extra={
+            "sweep_seconds": sweep,
+            "sweep_scenarios_per_sec": S / sweep,
+            "sweep_compiled_programs": n_compiled,
+            "one_compile_for_grid": n_compiled in (1, -1),
+            "robustness_margin_slow_quartile": async_share - sync_share,
+        })
 
 
 ALL = [server_mode_grid]

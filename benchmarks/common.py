@@ -124,3 +124,31 @@ def emit(name: str, us_per_call: float, derived, payload: Optional[dict] = None)
         os.makedirs(RESULTS_DIR, exist_ok=True)
         with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
             json.dump(payload, f, indent=1, default=float)
+
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def write_bench(name: str, *, config: dict, cells: dict, honesty,
+                extra: Optional[dict] = None) -> dict:
+    """Unified BENCH_*.json emitter (tools/bench_schema.py validates).
+
+    Every headline bench document has the same spine — ``name``,
+    ``config`` (the grid/shape parameters that define the cells),
+    ``cells`` (named result rows), ``honesty`` (what the numbers do and
+    do NOT measure on this backend), and an ``env`` reproducibility
+    stamp. Bench-specific derived metrics ride as ``extra`` top-level
+    keys; they may not shadow the spine.
+    """
+    from repro.utils.events import env_stamp
+    doc = {"schema": BENCH_SCHEMA_VERSION, "name": name,
+           "config": config, "cells": cells, "honesty": honesty,
+           "env": env_stamp()}
+    if extra:
+        clash = set(extra) & set(doc)
+        assert not clash, f"extra keys shadow the schema spine: {clash}"
+        doc.update(extra)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    return doc

@@ -28,7 +28,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.core.selection import SelectionConfig
 from repro.core.server import FLConfig
 from repro.core.sweep import SweepEngine
@@ -118,18 +118,17 @@ def fault_defense_grid():
                 np.asarray(logs["quarantine"])[i].sum()),
         }
 
-    payload = {
-        "grid": {"corrupt_rates": CORRUPT_RATES, "trim_k": TRIM_K,
-                 "scenarios": S, "rounds": ROUNDS,
-                 "n_clients": N_CLIENTS, "cohort": CPR},
-        "sweep_seconds": sweep,
-        "sweep_scenarios_per_sec": S / sweep,
-        "sweep_compiled_programs": n_compiled,
-        "one_compile_for_grid": n_compiled in (1, -1),
-        "baseline_seconds_faults_compiled_out": base,
-        "defended_overhead": sweep / base if base > 0 else float("inf"),
-        "per_cell": per_cell,
-        "honesty": {
+    emit("BENCH_faults", 1e6 * sweep / (S * ROUNDS),
+         f"fault×defense grid S{S} in ONE program "
+         f"({S / sweep:.2f} scen/s); defended-program overhead "
+         f"{sweep / base:.2f}x vs faults compiled out")
+    write_bench(
+        "BENCH_faults",
+        config={"corrupt_rates": CORRUPT_RATES, "trim_k": TRIM_K,
+                "scenarios": S, "rounds": ROUNDS,
+                "n_clients": N_CLIENTS, "cohort": CPR},
+        cells=per_cell,
+        honesty={
             "backend": jax.default_backend(),
             "note": "Single-CPU timing via the jnp reference (the "
                     "Pallas robust kernel runs on TPU); the overhead "
@@ -141,12 +140,15 @@ def fault_defense_grid():
                     "undefended CELLS still pay for the defended "
                     "program.",
         },
-    }
-    emit("BENCH_faults", 1e6 * sweep / (S * ROUNDS),
-         f"fault×defense grid S{S} in ONE program "
-         f"({S / sweep:.2f} scen/s); defended-program overhead "
-         f"{sweep / base:.2f}x vs faults compiled out",
-         payload)
+        extra={
+            "sweep_seconds": sweep,
+            "sweep_scenarios_per_sec": S / sweep,
+            "sweep_compiled_programs": n_compiled,
+            "one_compile_for_grid": n_compiled in (1, -1),
+            "baseline_seconds_faults_compiled_out": base,
+            "defended_overhead": sweep / base if base > 0
+            else float("inf"),
+        })
 
 
 ALL = [fault_defense_grid]

@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 
 
 def _time(fn, *args, iters=5):
@@ -123,28 +123,35 @@ def kernel_uplink_fused():
     #                reads: x/x'x3 + ef         writes: x' + ef'
     emit("BENCH_uplink_fused", us_ref,
          f"unfused_us={us_unf:.0f} kernel_interpret_us={us_kern:.0f} "
-         f"traffic_ratio={unfused_bytes / fused_bytes:.2f}",
-         {"C": C, "P": P, "F": F, "d_up": D,
-          "bytes_cpf_tensor": cpf,
-          "fused": {"hbm_reads_cpf": 1, "hbm_reads_ef": 1,
-                    "hbm_writes_cpf": 1, "passes": 1,
-                    "us_ref_singlepass": us_ref,
-                    "us_kernel_interpret": us_kern,
-                    "gbps_ref_singlepass": fused_bytes / us_ref / 1e3,
-                    "bytes": fused_bytes},
-          "unfused": {"hbm_reads_cpf": unfused_reads, "passes": 4,
-                      "us": us_unf,
-                      "gbps": unfused_bytes / us_unf / 1e3,
-                      "bytes": unfused_bytes},
-          "roofline": {
-              "min_bytes_one_pass": fused_bytes,
-              "traffic_ratio_unfused_over_fused":
-                  unfused_bytes / fused_bytes,
-              "note": "structural BlockSpec accounting; CPU timing is "
-                      "not TPU-representative (see EXPERIMENTS.md — "
-                      "CPU loop-fusion recomputes the shared EF tensor, "
-                      "so the one-pass form may time slower here)"},
-          "speedup_singlepass_vs_unfused": us_unf / us_ref})
+         f"traffic_ratio={unfused_bytes / fused_bytes:.2f}")
+    write_bench(
+        "BENCH_uplink_fused",
+        config={"C": C, "P": P, "F": F, "d_up": D,
+                "bytes_cpf_tensor": cpf},
+        cells={
+            "fused": {"hbm_reads_cpf": 1, "hbm_reads_ef": 1,
+                      "hbm_writes_cpf": 1, "passes": 1,
+                      "us_ref_singlepass": us_ref,
+                      "us_kernel_interpret": us_kern,
+                      "gbps_ref_singlepass": fused_bytes / us_ref / 1e3,
+                      "bytes": fused_bytes},
+            "unfused": {"hbm_reads_cpf": unfused_reads, "passes": 4,
+                        "us": us_unf,
+                        "gbps": unfused_bytes / us_unf / 1e3,
+                        "bytes": unfused_bytes},
+            "roofline": {
+                "min_bytes_one_pass": fused_bytes,
+                "traffic_ratio_unfused_over_fused":
+                    unfused_bytes / fused_bytes},
+        },
+        honesty={
+            "backend": jax.default_backend(),
+            "note": "structural BlockSpec accounting; CPU timing is "
+                    "not TPU-representative (see EXPERIMENTS.md — "
+                    "CPU loop-fusion recomputes the shared EF tensor, "
+                    "so the one-pass form may time slower here)",
+        },
+        extra={"speedup_singlepass_vs_unfused": us_unf / us_ref})
 
 
 ALL = [kernel_packet_mask, kernel_tra_agg, kernel_qfed_reweight,

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.configs.synthetic_mlp import MLPConfig
 from repro.core.engine import RoundScanEngine
 from repro.core.mlp import mlp_init
@@ -168,9 +168,20 @@ def netsim_mask_and_grid():
     """Headline netsim numbers (emits BENCH_netsim.json)."""
     mask = _mask_gen_cell()
     grid = _burst_grid_cell()
-    rows = {
-        "cells": {"mask_gen": mask, "burst_grid": grid},
-        "honesty": {
+    emit("BENCH_netsim",
+         1e6 * grid["sweep_seconds"] / (grid["scenarios"] * ROUNDS),
+         f"mask_gen {mask['device_vs_host']:.1f}x vs host numpy "
+         f"({mask['device_masks_per_sec']:.0f} vs "
+         f"{mask['host_masks_per_sec']:.0f} masks/s); burst grid "
+         f"S{grid['scenarios']} {grid['speedup_excl_compile']:.1f}x vs "
+         f"sequential ({grid['sweep_scenarios_per_sec']:.2f} scen/s, "
+         f"one program: {grid['one_compile_for_grid']})")
+    write_bench(
+        "BENCH_netsim",
+        config={"n_clients": N_CLIENTS, "rounds": ROUNDS,
+                "bursts": BURSTS, "loss_rates": RATES},
+        cells={"mask_gen": mask, "burst_grid": grid},
+        honesty={
             "backend": jax.default_backend(),
             "note": "On CPU the device mask path is the XLA-compiled "
                     "jnp reference (no Pallas lowering), so mask_gen "
@@ -179,17 +190,7 @@ def netsim_mask_and_grid():
                     "is per-round dispatch amortization, not extra "
                     "FLOPs. On TPU the mask path is the "
                     "kernels/netsim_mask Pallas kernel.",
-        },
-    }
-    emit("BENCH_netsim",
-         1e6 * grid["sweep_seconds"] / (grid["scenarios"] * ROUNDS),
-         f"mask_gen {mask['device_vs_host']:.1f}x vs host numpy "
-         f"({mask['device_masks_per_sec']:.0f} vs "
-         f"{mask['host_masks_per_sec']:.0f} masks/s); burst grid "
-         f"S{grid['scenarios']} {grid['speedup_excl_compile']:.1f}x vs "
-         f"sequential ({grid['sweep_scenarios_per_sec']:.2f} scen/s, "
-         f"one program: {grid['one_compile_for_grid']})",
-         rows)
+        })
 
 
 ALL = [netsim_mask_and_grid]

@@ -23,7 +23,14 @@ def main(argv=None) -> None:
                          "(e.g. --only uplink)")
     ap.add_argument("--skip-fl", action="store_true",
                     help="skip the (slower) federated-learning figures")
+    ap.add_argument("--profile-dir", default=None,
+                    help="write a jax.profiler trace (TensorBoard/"
+                         "Perfetto) covering the selected benchmarks")
     args = ap.parse_args(argv)
+
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
 
     from benchmarks import (async_bench, beyond, engine_bench,
                             faults_bench, kernel_bench, netsim_bench,
@@ -52,6 +59,9 @@ def main(argv=None) -> None:
                   file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s, failures={failures}",
           file=sys.stderr)
+    if args.profile_dir:
+        import jax
+        jax.profiler.stop_trace()
     if failures:
         raise SystemExit(1)
 

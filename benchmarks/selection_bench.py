@@ -24,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.configs.synthetic_mlp import MLPConfig
 from repro.core.mlp import mlp_init
 from repro.core.selection import POLICIES, SelectionConfig
@@ -43,10 +43,10 @@ LOSS_RATES = (0.1, 0.2, 0.3)
 TEMPERATURES = {"uniform": 1.0, "bandwidth_threshold": 0.05,
                 "gradient_norm": 0.5, "loss_aware": 0.5,
                 "netsim_state": 0.05,
-                # no deadline in this grid -> stale_mem stays zero and
-                # the policy scores as uniform; it rides along so the
-                # benchmark keeps covering the FULL traced family
-                "staleness_aware": 0.5}
+                # no deadline/faults in this grid -> stale_mem/rep_mem
+                # stay zero and these score as uniform; they ride along
+                # so the benchmark keeps covering the FULL traced family
+                "staleness_aware": 0.5, "reputation_aware": 0.5}
 
 
 def _grid_cfgs():
@@ -112,18 +112,18 @@ def selection_policy_grid():
 
     uni = per_policy["uniform"]["bottom_quartile_share"]
     thr = per_policy["bandwidth_threshold"]["bottom_quartile_share"]
-    payload = {
-        "grid": {"policies": list(POLICIES), "loss_rates": LOSS_RATES,
-                 "scenarios": S, "rounds": ROUNDS,
-                 "n_clients": N_CLIENTS, "cohort": CPR,
-                 "temperatures": TEMPERATURES},
-        "sweep_seconds": sweep,
-        "sweep_scenarios_per_sec": S / sweep,
-        "sweep_compiled_programs": n_compiled,
-        "one_compile_for_grid": n_compiled in (1, -1),
-        "per_policy": per_policy,
-        "bias_margin_bottom_quartile": uni - thr,
-        "honesty": {
+    emit("BENCH_selection", 1e6 * sweep / (S * ROUNDS),
+         f"policy×loss grid S{S} in ONE program "
+         f"({S / sweep:.2f} scen/s); bottom-quartile share "
+         f"uniform={uni:.2f} vs threshold={thr:.2f}")
+    write_bench(
+        "BENCH_selection",
+        config={"policies": list(POLICIES), "loss_rates": LOSS_RATES,
+                "scenarios": S, "rounds": ROUNDS,
+                "n_clients": N_CLIENTS, "cohort": CPR,
+                "temperatures": TEMPERATURES},
+        cells=per_policy,
+        honesty={
             "backend": jax.default_backend(),
             "note": "Single-CPU timing: scenarios/sec measures vmap "
                     "dispatch amortization across the policy family, "
@@ -131,12 +131,13 @@ def selection_policy_grid():
                     "five score vectors in every cell's program, which "
                     "is the price of compiling the family once.",
         },
-    }
-    emit("BENCH_selection", 1e6 * sweep / (S * ROUNDS),
-         f"policy×loss grid S{S} in ONE program "
-         f"({S / sweep:.2f} scen/s); bottom-quartile share "
-         f"uniform={uni:.2f} vs threshold={thr:.2f}",
-         payload)
+        extra={
+            "sweep_seconds": sweep,
+            "sweep_scenarios_per_sec": S / sweep,
+            "sweep_compiled_programs": n_compiled,
+            "one_compile_for_grid": n_compiled in (1, -1),
+            "bias_margin_bottom_quartile": uni - thr,
+        })
 
 
 ALL = [selection_policy_grid]

@@ -35,7 +35,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from repro.configs.synthetic_mlp import MLPConfig
 from repro.core.engine import RoundScanEngine
 from repro.core.mlp import mlp_init
@@ -172,7 +172,7 @@ def sweep_vs_sequential():
     rows["cells"]["paper_S16"] = cell(16, PAPER)
 
     c16 = rows["cells"]["probe_S16"]
-    rows["acceptance"] = {
+    acceptance = {
         "speedup_S16_dispatch_bound": c16["speedup_excl_compile"],
         "one_compile_for_grid": c16["sweep_n_compiles"] in (1, -1),
     }
@@ -182,8 +182,19 @@ def sweep_vs_sequential():
          f"{c16['sequential_scenarios_per_sec']:.2f} scen/s, exec-only "
          f"{c16['speedup_exec_only']:.1f}x, compile "
          f"{c16['sweep_compile_seconds']:.1f}s once; paper cfg "
-         f"{rows['cells']['paper_S16']['speedup_excl_compile']:.1f}x)",
-         rows)
+         f"{rows['cells']['paper_S16']['speedup_excl_compile']:.1f}x)")
+    write_bench(
+        "BENCH_sweep", config=rows["config"], cells=rows["cells"],
+        honesty={
+            "backend": jax.default_backend(),
+            "note": "Single-CPU timing: the probe workload is "
+                    "dispatch-bound by design, so the speedup measures "
+                    "vmap dispatch amortization (S scenarios, one "
+                    "program) rather than extra FLOPs; the paper-config "
+                    "cell shows what survives on a compute-bound "
+                    "workload.",
+        },
+        extra={"acceptance": acceptance})
 
 
 ALL = [sweep_vs_sequential]

@@ -73,7 +73,9 @@ from jax.flatten_util import ravel_pytree
 from repro.core import async_agg as async_mod
 from repro.core import client_updates as cu
 from repro.core import selection as sel_mod
+from repro.core import telemetry as tele_mod
 from repro.core.async_agg import ArrivalBuffer
+from repro.core.telemetry import TelemetryState
 from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
@@ -128,6 +130,12 @@ class EngineState(NamedTuple):
     # reputation the reputation_aware selection policy reads. (0,)
     # unless that policy (or traced selection) needs it.
     rep_mem: jnp.ndarray    # (N,) f32, or (0,)
+    # device-resident telemetry accumulators (core/telemetry.py):
+    # cumulative per-client participation / arrival / staleness /
+    # quarantine aggregates at TelemetryConfig(level="full"); all (0,)
+    # otherwise — the default "off" compiles the subsystem out and is
+    # locked bitwise vs the frozen PR-8 step (tests/_legacy_engine_v8).
+    tele: TelemetryState
 
 
 class ScenarioCtx(NamedTuple):
@@ -294,13 +302,20 @@ def _cached_jits(cfg, cohort: int):
     # and would otherwise skip its construction-time checks
     validate_round_config(cfg)
     key = (_static_key(cfg), cohort)
-    if key not in _STEP_CACHE:
+    hit = key in _STEP_CACHE
+    # every lookup logs the static-signature fingerprint (hit or
+    # insert) to the program registry — two configs silently colliding
+    # onto one program is diagnosable (and raises) there, and the
+    # timing wrapper books compile/exec time against the same key.
+    fp = tele_mod.REGISTRY.record_lookup("engine", key, hit=hit)
+    if not hit:
         step = make_round_step(cfg, cohort)
-        single = jax.jit(step, donate_argnums=(1,))
-        block = jax.jit(
+        single = tele_mod.TimedProgram(
+            jax.jit(step, donate_argnums=(1,)), "engine", fp)
+        block = tele_mod.TimedProgram(jax.jit(
             lambda ctx, state, ts: jax.lax.scan(
                 lambda s, t: step(ctx, s, t), state, ts),
-            donate_argnums=(1,))
+            donate_argnums=(1,)), "engine", fp)
         _STEP_CACHE[key] = (step, single, block)
     return _STEP_CACHE[key]
 
@@ -358,6 +373,7 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
         if cfg.faults.enabled
         and (cfg.sel.traced or cfg.sel.policy == "reputation_aware")
         else jnp.zeros((0,), jnp.float32),
+        tele=tele_mod.init_telemetry_state(cfg.telemetry, N),
     )
 
 
@@ -484,6 +500,11 @@ def make_round_step(cfg, cohort: int):
     trim_k = dfn_cfg.trim_k
     need_rep = use_faults and (traced_sel
                                or policy == "reputation_aware")
+    # telemetry level is static program structure (core/telemetry.py):
+    # "off" compiles the subsystem out entirely — the step below is
+    # then bitwise the frozen PR-8 step (tests/_legacy_engine_v8.py).
+    tele_cfg = cfg.telemetry
+    tele_on = tele_cfg.level != "off"
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -635,7 +656,7 @@ def make_round_step(cfg, cohort: int):
             secs = round_upload_seconds(P, F, jnp.exp(net_logbw[ids]),
                                         lr_c, retransmit)
             delivered = deadline_delivered(secs, ctx.deadline_s)
-            if need_stale or nonsync:
+            if need_stale or nonsync or tele_on:
                 lateness = arrival_lateness(secs, ctx.deadline_s)
             if not nonsync:
                 # sync: a miss drops the WHOLE upload (row of zeros —
@@ -883,11 +904,6 @@ def make_round_step(cfg, cohort: int):
         rep_new = state.rep_mem.at[ids].add(rob.qcnt / P) \
             if need_rep else state.rep_mem
 
-        new_state = EngineState(new_params, new_ef, c_global_new,
-                                c_i_new, lam_new,
-                                NetSimState(net_channel, net_logbw),
-                                gnorm_new, loss_new, stale_new,
-                                new_buf, echo_new, rep_new)
         logs = {"loss": aux["loss0"].mean(), "ids": ids}
         if use_faults:
             # per-cohort-slot quarantined-packet counts — the
@@ -898,6 +914,34 @@ def make_round_step(cfg, cohort: int):
             # time at full weight, 0 = dropped): the participation
             # signal the fairness analyses read.
             logs["arrival"] = arrival
+        # device-resident telemetry (core/telemetry.py): per-round
+        # scalars / compact aggregates join the scan outputs under
+        # "tele/..." keys, and at level="full" the cumulative
+        # per-client aggregates update in the carry. Reads only
+        # signals the round already computed — never the math.
+        new_tele = state.tele
+        if tele_on:
+            tele_scale = uplink_ops.debias_client_scale(
+                w_agg, mode=debias, kept=kept, sufficient=suff,
+                loss_rate=lr_c, mult=mult)
+            tlogs, new_tele = tele_mod.round_telemetry(
+                tele_cfg, state.tele, ids=ids, n_clients=N,
+                pkt_mask=pkt_mask, loss_mask=loss_mask,
+                old_vec=old_vec, new_vec=new_vec, scale=tele_scale,
+                logbw=ctx.sel_logbw
+                if ctx.sel_logbw.shape[0] == N else None,
+                ef_new_rows=new_ef_rows if ef else None,
+                arrival=arrival if use_dl else None,
+                lateness=lateness if use_dl else None,
+                qcnt=rob.qcnt if use_faults else None,
+                buf_due=new_buf.due if use_buf else None,
+                buf_empty_due=async_mod.EMPTY_DUE)
+            logs.update(tlogs)
+        new_state = EngineState(new_params, new_ef, c_global_new,
+                                c_i_new, lam_new,
+                                NetSimState(net_channel, net_logbw),
+                                gnorm_new, loss_new, stale_new,
+                                new_buf, echo_new, rep_new, new_tele)
         return new_state, logs
 
     return step

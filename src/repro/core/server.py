@@ -27,10 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import client_updates as cu
+from repro.core import telemetry as tele_mod
 from repro.core import tra as tra_mod
 from repro.core.async_agg import AsyncConfig
-from repro.core.engine import RoundScanEngine
+from repro.core.engine import RoundScanEngine, _static_key
 from repro.core.selection import SelectionConfig
+from repro.core.telemetry import TelemetryConfig
+from repro.utils.events import EventWriter, fingerprint_of
 from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
 from repro.core.sweep import SweepEngine
@@ -84,6 +87,14 @@ class FLConfig:
     # uplink path is only compiled with the fault model).
     defense: DefenseConfig = dataclasses.field(
         default_factory=DefenseConfig)
+    # device-resident telemetry (core/telemetry.py): per-round scalars
+    # and per-client aggregates accumulated inside the scan and flushed
+    # as typed RoundRecords (utils/events.py). The default
+    # (level="off") compiles the subsystem out and is bit-identical to
+    # the pre-telemetry engine. STATIC: the level cannot vary across a
+    # sweep (it changes the compiled program).
+    telemetry: TelemetryConfig = dataclasses.field(
+        default_factory=TelemetryConfig)
     # algorithm hyper-parameters (paper / source-code defaults)
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps
@@ -200,9 +211,24 @@ class FederatedServer:
         return self.rng.choice(elig, n, replace=False)
 
     # -- public API ---------------------------------------------------------
+    def _open_events(self, events):
+        """(writer, owned): pass-through for an EventWriter, open+stamp
+        for a path. Owned writers are closed by the caller's finally."""
+        if events is None or isinstance(events, EventWriter):
+            return events, False
+        cfg = self.cfg
+        return EventWriter(
+            events,
+            config_fingerprint=fingerprint_of(_static_key(cfg)),
+            meta={"n_clients": self.data.n_clients,
+                  "n_rounds": cfg.n_rounds, "algo": cfg.algo,
+                  "engine": cfg.engine,
+                  "telemetry_level": cfg.telemetry.level}), True
+
     def run_round(self, t: int) -> RoundLog:
         cfg = self.cfg
         self._state, ys = self.engine.run_single(self._state, t)
+        self._last_ys = ys
         log = RoundLog(t, float(ys["loss"]))
         if (t + 1) % cfg.eval_every == 0 or t == cfg.n_rounds - 1:
             log.report = self.evaluate()
@@ -211,28 +237,53 @@ class FederatedServer:
         self.history.append(log)
         return log
 
-    def run(self) -> List[RoundLog]:
+    def run(self, events=None) -> List[RoundLog]:
+        """Run all rounds. ``events`` — None, a JSONL path, or an open
+        ``EventWriter`` — streams typed per-round telemetry records
+        (plus final client aggregates at level="full" and the
+        program-timing ledger) as blocks flush."""
         cfg = self.cfg
-        if cfg.engine == "per_round":
-            for t in range(cfg.n_rounds):
-                self.run_round(t)
-            return self.history
-        # scanned blocks, cut at evaluation boundaries
-        t = 0
-        while t < cfg.n_rounds:
-            t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
-                     cfg.n_rounds)
-            self._state, logs = self.engine.run_block(self._state, t,
-                                                      t1 - t)
-            for i, loss in enumerate(logs["loss"]):
-                self.history.append(RoundLog(t + i, float(loss)))
-            last = t1 - 1
-            if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
-                self.history[-1].report = self.evaluate()
-                if cfg.algo in ("pfedme", "perfedavg"):
-                    self.history[-1].personalized = \
-                        self.evaluate_personalized()
-            t = t1
+        writer, own = self._open_events(events)
+        try:
+            if cfg.engine == "per_round":
+                for t in range(cfg.n_rounds):
+                    self.run_round(t)
+                    if writer is not None:
+                        logs1 = {k: np.asarray(v)[None]
+                                 for k, v in self._last_ys.items()}
+                        for rec in tele_mod.records_from_logs(
+                                logs1, t0=t):
+                            writer.write_round(rec)
+            else:
+                # scanned blocks, cut at evaluation boundaries
+                t = 0
+                while t < cfg.n_rounds:
+                    t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
+                             cfg.n_rounds)
+                    self._state, logs = self.engine.run_block(
+                        self._state, t, t1 - t)
+                    for i, loss in enumerate(logs["loss"]):
+                        self.history.append(RoundLog(t + i, float(loss)))
+                    if writer is not None:
+                        for rec in tele_mod.records_from_logs(
+                                logs, t0=t):
+                            writer.write_round(rec)
+                    last = t1 - 1
+                    if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
+                        self.history[-1].report = self.evaluate()
+                        if cfg.algo in ("pfedme", "perfedavg"):
+                            self.history[-1].personalized = \
+                                self.evaluate_personalized()
+                    t = t1
+            if writer is not None:
+                if cfg.telemetry.level == "full":
+                    writer.write("client_stats", {
+                        "scenario": 0,
+                        **tele_mod.final_client_stats(self._state.tele)})
+                writer.write_program_stats(tele_mod.REGISTRY.stats())
+        finally:
+            if own and writer is not None:
+                writer.close()
         return self.history
 
     # -- evaluation ----------------------------------------------------------
@@ -287,7 +338,7 @@ def _stacked_eval_sets(datas: Sequence[FederatedDataset]):
     return jnp.asarray(X), jnp.asarray(Y), jnp.asarray(W)
 
 
-def run_grid(cfgs: Sequence[FLConfig], datas, nets=None
+def run_grid(cfgs: Sequence[FLConfig], datas, nets=None, events=None
              ) -> List[List[RoundLog]]:
     """Run a grid of same-shaped scenario configs as ONE compiled
     vmap(scan) program (core/sweep.SweepEngine) and demux per-scenario
@@ -304,32 +355,61 @@ def run_grid(cfgs: Sequence[FLConfig], datas, nets=None
     ``datas``/``nets`` follow ``SweepEngine.from_configs`` broadcasting:
     one shared value, a length-S sequence, or None (nets only) to sample
     from each scenario's seed.
+
+    ``events`` — None, a JSONL path, or an open ``EventWriter`` —
+    streams per-scenario telemetry records (scenario-major within each
+    block) plus final per-client aggregates (level="full") and the
+    program-timing ledger.
     """
     cfgs = list(cfgs)
     engine = SweepEngine.from_configs(cfgs, datas, nets)
     cfg = engine.cfg
     S = engine.n_scenarios
+    if events is None or isinstance(events, EventWriter):
+        writer, own = events, False
+    else:
+        writer, own = EventWriter(
+            events,
+            config_fingerprint=fingerprint_of(_static_key(cfg)),
+            meta={"n_scenarios": S, "n_rounds": cfg.n_rounds,
+                  "algo": cfg.algo, "engine": "sweep",
+                  "telemetry_level": cfg.telemetry.level}), True
     X, Y, W = _stacked_eval_sets([s.data for s in engine.scenarios])
     eval_fn = jax.jit(jax.vmap(jax.vmap(mlp_accuracy,
                                         in_axes=(None, 0, 0, 0))))
     states = engine.init_states()
     histories: List[List[RoundLog]] = [[] for _ in range(S)]
-    t = 0
-    while t < cfg.n_rounds:
-        t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
-                 cfg.n_rounds)
-        states, logs = engine.run_block(states, t, t1 - t)
-        for s in range(S):
-            for i in range(t1 - t):
-                histories[s].append(RoundLog(t + i,
-                                             float(logs["loss"][s, i])))
-        last = t1 - 1
-        if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
-            acc, correct, n = eval_fn(states.params, X, Y, W)
-            acc, correct, n = (np.asarray(acc), np.asarray(correct),
-                               np.asarray(n))
+    try:
+        t = 0
+        while t < cfg.n_rounds:
+            t1 = min((t // cfg.eval_every + 1) * cfg.eval_every,
+                     cfg.n_rounds)
+            states, logs = engine.run_block(states, t, t1 - t)
             for s in range(S):
-                histories[s][-1].report = fairness_report(
-                    acc[s], n[s], correct[s])
-        t = t1
+                for i in range(t1 - t):
+                    histories[s].append(
+                        RoundLog(t + i, float(logs["loss"][s, i])))
+            if writer is not None:
+                for rec in tele_mod.records_from_logs(logs, t0=t):
+                    writer.write_round(rec)
+            last = t1 - 1
+            if t1 % cfg.eval_every == 0 or last == cfg.n_rounds - 1:
+                acc, correct, n = eval_fn(states.params, X, Y, W)
+                acc, correct, n = (np.asarray(acc), np.asarray(correct),
+                                   np.asarray(n))
+                for s in range(S):
+                    histories[s][-1].report = fairness_report(
+                        acc[s], n[s], correct[s])
+            t = t1
+        if writer is not None:
+            if cfg.telemetry.level == "full":
+                stats = tele_mod.final_client_stats(states.tele)
+                for s in range(S):
+                    writer.write("client_stats", {
+                        "scenario": s,
+                        **{k: v[s] for k, v in stats.items()}})
+            writer.write_program_stats(tele_mod.REGISTRY.stats())
+    finally:
+        if own and writer is not None:
+            writer.close()
     return histories

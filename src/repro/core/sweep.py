@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import async_agg as async_mod
 from repro.core import selection as sel_mod
+from repro.core import telemetry as tele_mod
 from repro.core import tra as tra_mod
 from repro.core.async_agg import AsyncConfig
 from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_DEF_FIELDS,
@@ -316,7 +317,9 @@ class SweepEngine:
             d_trim=jnp.asarray([1.0 if df.trim else 0.0
                                 for df in dfns], jnp.float32))
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
-        if cache_key not in _SWEEP_CACHE:
+        hit = cache_key in _SWEEP_CACHE
+        fp = tele_mod.REGISTRY.record_lookup("sweep", cache_key, hit=hit)
+        if not hit:
             step = make_round_step(cfg, self.cohort)
             ctx_axes = ScenarioCtx(base_key=0, loss_rate=0, eligible=0,
                                    sufficient=0,
@@ -331,10 +334,12 @@ class SweepEngine:
                                    f_fail=0, f_flip=0, f_echo=0,
                                    d_screen=0, d_clip=0, d_trim=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
-            _SWEEP_CACHE[cache_key] = (step, jax.jit(
-                lambda ctx, state, ts: jax.lax.scan(
-                    lambda s, t: vstep(ctx, s, t), state, ts),
-                donate_argnums=(1,)))
+            _SWEEP_CACHE[cache_key] = (step, tele_mod.TimedProgram(
+                jax.jit(
+                    lambda ctx, state, ts: jax.lax.scan(
+                        lambda s, t: vstep(ctx, s, t), state, ts),
+                    donate_argnums=(1,)),
+                "sweep", fp))
         self._step, self._block = _SWEEP_CACHE[cache_key]
 
     @classmethod

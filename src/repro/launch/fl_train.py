@@ -28,8 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig, get_config
+from repro.core import telemetry as tele_mod
 from repro.core.tra import TRAConfig
 from repro.launch.train import synth_batch
+from repro.utils.events import EventWriter, RoundRecord, fingerprint_of
 from repro.models import transformer as tf
 from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
                                     make_optimizer)
@@ -232,28 +234,42 @@ def _run_sweep(cfg, tcfg, tra, args, rates):
         return jax.tree.map(lambda x: jnp.stack([x] * S), tree)
 
     params_s, opt_s = stack(params), stack(opt_state)
-    sweep_step = jax.jit(sweep_step)
+    sweep_step = _timed(jax.jit(sweep_step), "sweep", args)
     loss_rates = jnp.asarray(rates, jnp.float32)
     sufficient = jnp.asarray(
         [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
     rng = np.random.default_rng(0)
-    for i in range(args.steps):
-        batches = [synth_batch(cfg, args.batch, args.seq, rng)
-                   for _ in range(C)]
-        batch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
-        keys = jnp.stack([jax.random.PRNGKey(1000 + i + 7919 * s)
-                          for s in range(S)])
-        t0 = time.time()
-        params_s, opt_s, m = sweep_step(params_s, opt_s, batch,
-                                        sufficient, keys, loss_rates)
-        losses = np.asarray(m["loss"])
-        per = " ".join(f"r={r:.2f}:{l:8.4f}"
-                       for r, l in zip(rates, losses))
-        print(f"round {i:4d} {per} ({time.time()-t0:.2f}s)", flush=True)
-        if not np.all(np.isfinite(losses)):
-            # fail fast naming the bad scenario/leaf, not loss=nan later
-            assert_finite_tree(params_s, name=f"round{i}/params")
-            assert_finite_tree({"loss": losses}, name=f"round{i}")
+    writer = _open_writer(args, "sweep")
+    try:
+        for i in range(args.steps):
+            batches = [synth_batch(cfg, args.batch, args.seq, rng)
+                       for _ in range(C)]
+            batch = {k: jnp.stack([b[k] for b in batches])
+                     for k in batches[0]}
+            keys = jnp.stack([jax.random.PRNGKey(1000 + i + 7919 * s)
+                              for s in range(S)])
+            t0 = time.time()
+            params_s, opt_s, m = sweep_step(params_s, opt_s, batch,
+                                            sufficient, keys, loss_rates)
+            losses = np.asarray(m["loss"])
+            per = " ".join(f"r={r:.2f}:{l:8.4f}"
+                           for r, l in zip(rates, losses))
+            print(f"round {i:4d} {per} ({time.time()-t0:.2f}s)",
+                  flush=True)
+            if writer is not None:
+                for s in range(S):
+                    writer.write_round(RoundRecord(
+                        round=i, scenario=s,
+                        train_loss=float(losses[s]),
+                        realized_loss=float(rates[s])))
+            if not np.all(np.isfinite(losses)):
+                # fail fast naming the bad scenario/leaf, not loss=nan
+                assert_finite_tree(params_s, name=f"round{i}/params")
+                assert_finite_tree({"loss": losses}, name=f"round{i}")
+    finally:
+        if writer is not None:
+            writer.write_program_stats(tele_mod.REGISTRY.stats())
+            writer.close()
     return 0
 
 
@@ -282,8 +298,8 @@ def _run_async(cfg, tcfg, tra, args):
     n_pkts = -(-n_params // tra.packet_floats)
     contrib_step, apply_step, opt = make_fl_contrib_step(cfg, tcfg, tra, C)
     opt_state = opt.init(params)
-    contrib_step = jax.jit(contrib_step)
-    apply_step = jax.jit(apply_step)
+    contrib_step = _timed(jax.jit(contrib_step), "async_contrib", args)
+    apply_step = _timed(jax.jit(apply_step), "async_apply", args)
     sufficient = jnp.asarray(
         [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
     mbps = sample_networks(np.random.default_rng(0), C).upload_mbps
@@ -296,6 +312,7 @@ def _run_async(cfg, tcfg, tra, args):
     alpha = args.staleness_alpha
     buffer = []                  # [(due, w_tau, contrib pytree)] host-side
     rng = np.random.default_rng(0)
+    writer = _open_writer(args, "async")
     for i in range(args.steps):
         batches = [synth_batch(cfg, args.batch, args.seq, rng)
                    for _ in range(C)]
@@ -338,11 +355,48 @@ def _run_async(cfg, tcfg, tra, args):
               f"ontime={int((lateness == 0).sum())}/{C} "
               f"buffered={len(ready)}->merged den={den:.3f} "
               f"({time.time()-t0:.2f}s)", flush=True)
+        if writer is not None:
+            writer.write_round(RoundRecord(
+                round=i, train_loss=float(losses.mean()),
+                arrival_mean=float(np.mean(w_c)),
+                buf_fill=len(buffer) / max(args.buffer_k, 1),
+                delivered_frac=float((lateness == 0).mean())))
         if not np.isfinite(float(losses.mean())):
             # name the offending leaf (params or the loss itself)
             assert_finite_tree(params, name=f"round{i}/params")
             assert_finite_tree({"loss": losses}, name=f"round{i}")
+    if writer is not None:
+        writer.write_program_stats(tele_mod.REGISTRY.stats())
+        writer.close()
     return 0
+
+
+def _open_writer(args, route: str):
+    """Host-side telemetry writer for the launch routes. The launch
+    loops drive jitted steps directly (no scan engine), so records
+    carry only the signals the route actually observes — absent fields
+    mean "not instrumented here", matching the event-schema contract."""
+    if args.telemetry == "off":
+        return None
+    return EventWriter(
+        args.events_out,
+        config_fingerprint=fingerprint_of(
+            (args.arch, route, args.clients, args.insufficient,
+             args.loss_rate, args.debias, args.server_mode)),
+        meta={"route": route, "arch": args.arch,
+              "n_clients": args.clients, "steps": args.steps,
+              "telemetry_level": args.telemetry})
+
+
+def _timed(fn, route: str, args):
+    """Register + wrap a launch-route jitted step in the program-timing
+    registry (compile/exec split, same ledger the engine caches use)."""
+    if args.telemetry == "off":
+        return fn
+    fp = tele_mod.REGISTRY.record_lookup(
+        "launch", (args.arch, route, args.clients, args.debias,
+                   args.server_mode), hit=False)
+    return tele_mod.TimedProgram(fn, "launch", fp)
 
 
 # Selection policies the host-driven launch loop supports. netsim_state
@@ -428,13 +482,40 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--telemetry", default="off",
+                    choices=("off", "scalars", "full"),
+                    help="host-side telemetry level; any non-off level "
+                         "streams per-round records to --events-out "
+                         "(the launch routes record the signals they "
+                         "observe; absent fields mean the route does "
+                         "not instrument that signal)")
+    ap.add_argument("--events-out", default=None,
+                    help="JSONL event-stream path (tools/flstat.py "
+                         "renders it); required when --telemetry is on")
+    ap.add_argument("--profile-dir", default=None,
+                    help="write a jax.profiler trace (TensorBoard/"
+                         "Perfetto) covering the training loop")
     args = ap.parse_args(argv)
+    if args.telemetry != "off" and not args.events_out:
+        ap.error("--telemetry scalars|full needs --events-out PATH")
+    if args.events_out and args.telemetry == "off":
+        ap.error("--events-out needs --telemetry scalars|full")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     tcfg = TrainConfig(lr=args.lr)
     tra = TRAConfig(loss_rate=args.loss_rate, debias=args.debias)
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    try:
+        return _dispatch(ap, args, cfg, tcfg, tra)
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+
+
+def _dispatch(ap, args, cfg, tcfg, tra):
     if args.server_mode != "sync":
         if args.sweep_loss_rates or args.cohort is not None:
             ap.error("--server-mode semi_sync/async is a single-scenario "
@@ -460,39 +541,54 @@ def main(argv=None):
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
     fl_step, opt = make_fl_train_step(cfg, tcfg, tra, C)
     opt_state = opt.init(params)
-    fl_step = jax.jit(fl_step)
+    fl_step = _timed(jax.jit(fl_step), "single", args)
     sufficient = jnp.asarray(
         [0.0] * args.insufficient + [1.0] * (C - args.insufficient))
     select = update = None
     if args.cohort is not None:
         select, update = _make_selector(args, C)
     rng = np.random.default_rng(0)
-    for i in range(args.steps):
-        batches = [synth_batch(cfg, args.batch, args.seq, rng)
-                   for _ in range(C)]
-        batch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
-        t0 = time.time()
-        participating, ids = None, None
-        if select is not None:
-            ids = select(i)
-            mask = np.zeros(C, np.float32)
-            mask[ids] = 1.0
-            participating = jnp.asarray(mask)
-        params, opt_state, m = fl_step(params, opt_state, batch, sufficient,
-                                       jax.random.PRNGKey(1000 + i),
-                                       participating=participating)
-        if update is not None:
-            update(ids, m)
-        cohort_note = "" if ids is None else f" cohort={sorted(ids.tolist())}"
-        print(f"round {i:4d} loss={float(m['loss']):8.4f} "
-              f"clients={np.asarray(m['client_losses']).round(3)}"
-              f"{cohort_note} ({time.time()-t0:.2f}s)", flush=True)
-        if not np.isfinite(float(m["loss"])):
-            # a NaN loss means either the model diverged or an upload
-            # poisoned the aggregate — name the leaf instead of a bare
-            # AssertionError so the failure is actionable
-            assert_finite_tree(params, name=f"round{i}/params")
-            assert_finite_tree(m, name=f"round{i}/metrics")
+    writer = _open_writer(args, "single")
+    try:
+        for i in range(args.steps):
+            batches = [synth_batch(cfg, args.batch, args.seq, rng)
+                       for _ in range(C)]
+            batch = {k: jnp.stack([b[k] for b in batches])
+                     for k in batches[0]}
+            t0 = time.time()
+            participating, ids = None, None
+            if select is not None:
+                ids = select(i)
+                mask = np.zeros(C, np.float32)
+                mask[ids] = 1.0
+                participating = jnp.asarray(mask)
+            params, opt_state, m = fl_step(params, opt_state, batch,
+                                           sufficient,
+                                           jax.random.PRNGKey(1000 + i),
+                                           participating=participating)
+            if update is not None:
+                update(ids, m)
+            cohort_note = ("" if ids is None
+                           else f" cohort={sorted(ids.tolist())}")
+            print(f"round {i:4d} loss={float(m['loss']):8.4f} "
+                  f"clients={np.asarray(m['client_losses']).round(3)}"
+                  f"{cohort_note} ({time.time()-t0:.2f}s)", flush=True)
+            if writer is not None:
+                writer.write_round(RoundRecord(
+                    round=i, train_loss=float(m["loss"]),
+                    cohort=(sorted(int(x) for x in ids)
+                            if ids is not None else None),
+                    realized_loss=float(args.loss_rate)))
+            if not np.isfinite(float(m["loss"])):
+                # a NaN loss means either the model diverged or an
+                # upload poisoned the aggregate — name the leaf instead
+                # of a bare AssertionError so the failure is actionable
+                assert_finite_tree(params, name=f"round{i}/params")
+                assert_finite_tree(m, name=f"round{i}/metrics")
+    finally:
+        if writer is not None:
+            writer.write_program_stats(tele_mod.REGISTRY.stats())
+            writer.close()
     return 0
 
 

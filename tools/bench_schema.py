@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Validate the unified BENCH_*.json schema (benchmarks/results/).
+
+Every headline bench document shares one spine, written by
+``benchmarks.common.write_bench``:
+
+  schema   int >= 1
+  name     str, matches the file stem
+  config   dict — the grid/shape parameters that define the cells
+  cells    non-empty dict of named result rows (each a dict)
+  honesty  str or dict with a non-empty "note" — what the numbers do
+           and do NOT measure on this backend
+  env      dict reproducibility stamp (git/platform/python/time at
+           minimum; jax/backend when emitted from a jax process)
+
+Extra top-level keys (derived headline metrics) are allowed; they may
+not shadow the spine. CI runs this over benchmarks/results/BENCH_*.json
+so a bench writer drifting off-schema fails the build, not a reader
+six months later.
+
+Run as: python tools/bench_schema.py [paths...]
+(defaults to benchmarks/results/BENCH_*.json)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+SPINE = ("schema", "name", "config", "cells", "honesty", "env")
+ENV_KEYS = ("git", "platform", "python", "time")
+
+
+def validate(path: str) -> List[str]:
+    """Return a list of problems (empty = valid)."""
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    for key in SPINE:
+        if key not in doc:
+            errs.append(f"missing required key {key!r}")
+    if errs:
+        return errs
+    if not (isinstance(doc["schema"], int) and doc["schema"] >= 1):
+        errs.append(f"schema must be int >= 1, got {doc['schema']!r}")
+    stem = os.path.splitext(os.path.basename(path))[0]
+    if doc["name"] != stem:
+        errs.append(f"name {doc['name']!r} != file stem {stem!r}")
+    if not isinstance(doc["config"], dict):
+        errs.append("config must be an object")
+    cells = doc["cells"]
+    if not (isinstance(cells, dict) and cells):
+        errs.append("cells must be a non-empty object")
+    else:
+        for cname, cell in cells.items():
+            if not isinstance(cell, dict):
+                errs.append(f"cell {cname!r} is not an object")
+    honesty = doc["honesty"]
+    if isinstance(honesty, dict):
+        if not str(honesty.get("note", "")).strip():
+            errs.append("honesty.note missing or empty")
+    elif not (isinstance(honesty, str) and honesty.strip()):
+        errs.append("honesty must be a non-empty string or an object "
+                    "with a note")
+    env = doc["env"]
+    if not isinstance(env, dict):
+        errs.append("env must be an object")
+    else:
+        for key in ENV_KEYS:
+            if key not in env:
+                errs.append(f"env missing {key!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if args:
+        paths = args
+    else:
+        results = os.path.join(os.path.dirname(__file__), "..",
+                               "benchmarks", "results")
+        paths = sorted(glob.glob(os.path.join(results, "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        errs = validate(path)
+        name = os.path.basename(path)
+        if errs:
+            failures += 1
+            print(f"{name}: INVALID")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"{name}: ok")
+    if failures:
+        print(f"{failures} bench file(s) off-schema", file=sys.stderr)
+        return 1
+    print(f"bench schema: all {len(paths)} file(s) valid")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,132 @@
+"""CI smoke for the telemetry subsystem (ISSUE 9):
+
+  1. telemetry OFF is bitwise locked: a run with the default
+     ``TelemetryConfig(level="off")`` produces the same losses, cohorts
+     and final params as the frozen PR-8 step replayed round-by-round
+     (tests/_legacy_engine_v8.py).
+  2. a 2-scenario telemetry-on grid compiles to ONE sweep program
+     (program registry probe), streams a JSONL event file whose
+     per-scenario records match an unswept FederatedServer run
+     field-for-field, and round-trips through tools/flstat.py
+     (summary + --json parse).
+
+Exits non-zero on any failure. The JSONL file is left at
+``--out`` (default /tmp/telemetry_smoke.jsonl) for CI artifact upload.
+
+Run as: PYTHONPATH=src python tools/telemetry_smoke.py
+"""
+import argparse
+import dataclasses
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "tests"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="/tmp/telemetry_smoke.jsonl")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from jax.flatten_util import ravel_pytree
+
+    from _legacy_engine_v8 import make_legacy_v8_round_step
+    from repro.core import telemetry as tele_mod
+    from repro.core.server import FederatedServer, FLConfig, run_grid
+    from repro.core.telemetry import TelemetryConfig
+    from repro.core.tra import TRAConfig
+    from repro.data.synthetic import generate_synthetic
+    from repro.network.trace import ClientNetworks
+    from repro.utils.events import load_stream
+
+    n = 16
+    data = generate_synthetic(np.random.default_rng(0), n_clients=n,
+                              alpha=0.5, beta=0.5)
+    nets = ClientNetworks(np.linspace(0.5, 20.0, n), np.full(n, 0.05))
+    failures = 0
+
+    def check(name, ok):
+        nonlocal failures
+        print(f"{name}: {'ok' if ok else 'FAIL'}")
+        failures += 0 if ok else 1
+
+    # -- 1. off-level bitwise lock vs the frozen PR-8 step -------------
+    cfg = FLConfig(algo="fedavg", n_rounds=4, clients_per_round=6,
+                   local_steps=2, batch_size=8, eval_every=100, seed=0,
+                   error_feedback=True,
+                   tra=TRAConfig(enabled=True, loss_rate=0.2))
+    srv = FederatedServer(cfg, data, nets)
+    legacy = jax.jit(make_legacy_v8_round_step(cfg, srv.engine.cohort))
+    ref = srv.engine.init_state(srv.params)
+    for t in range(cfg.n_rounds):
+        ref, _ = legacy(srv.engine.ctx, ref, jnp.int32(t))
+    srv.run()
+    check("off-lock params bitwise",
+          np.array_equal(np.asarray(ravel_pytree(ref.params)[0]),
+                         np.asarray(ravel_pytree(srv.params)[0])))
+    check("off-lock ef_mem bitwise",
+          np.array_equal(np.asarray(ref.ef_mem),
+                         np.asarray(srv._state.ef_mem)))
+
+    # -- 2. telemetry-on grid: one program, records match unswept ------
+    tele_mod.REGISTRY.reset()
+    base = FLConfig(algo="fedavg", n_rounds=4, clients_per_round=6,
+                    local_steps=2, batch_size=8, eval_every=2, seed=0,
+                    tra=TRAConfig(enabled=True, loss_rate=0.1),
+                    telemetry=TelemetryConfig(level="full"))
+    cfgs = [dataclasses.replace(
+        base, tra=dataclasses.replace(base.tra, loss_rate=r))
+        for r in (0.0, 0.3)]
+    run_grid(cfgs, data, nets, events=args.out)
+    check("grid compiles to ONE sweep program",
+          tele_mod.REGISTRY.programs_for("sweep") == 1)
+
+    header, rounds, programs = load_stream(args.out)
+    check("event stream has S*K round records",
+          len(rounds) == 2 * base.n_rounds)
+    check("program ledger flushed", len(programs) >= 1)
+    check("config fingerprint stamped",
+          bool(header.get("config_fingerprint")))
+
+    srv1 = FederatedServer(cfgs[1], data, nets)
+    single_path = args.out + ".single"
+    srv1.run(events=single_path)
+    _, single_rounds, _ = load_stream(single_path)
+    grid_s1 = [r for r in rounds if r.scenario == 1]
+    for r in grid_s1:
+        r.scenario = 0
+    check("sweep records == unswept records field-for-field",
+          grid_s1 == single_rounds)
+
+    # -- 3. flstat round-trip ------------------------------------------
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import flstat
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc_sum = flstat.main([args.out])
+    check("flstat summary renders", rc_sum == 0
+          and "scenario 1" in buf.getvalue())
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc_json = flstat.main([args.out, "--json"])
+    summary = json.loads(buf.getvalue())
+    check("flstat --json parses with both scenarios",
+          rc_json == 0 and set(summary["scenarios"]) == {"0", "1"})
+
+    if failures:
+        print(f"{failures} telemetry check(s) FAILED", file=sys.stderr)
+        return 1
+    print(f"telemetry smoke: all checks passed (events at {args.out})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
