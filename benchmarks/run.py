@@ -34,15 +34,16 @@ def main(argv=None) -> None:
 
     from benchmarks import (async_bench, beyond, engine_bench,
                             faults_bench, kernel_bench, netsim_bench,
-                            paper_figures, roofline, selection_bench,
-                            sweep_bench)
+                            paper_figures, recovery_bench, roofline,
+                            selection_bench, sweep_bench)
 
     benches = list(kernel_bench.ALL)
     if not args.skip_fl:
         benches += list(paper_figures.ALL) + list(beyond.ALL) \
             + list(engine_bench.ALL) + list(sweep_bench.ALL) \
             + list(netsim_bench.ALL) + list(selection_bench.ALL) \
-            + list(async_bench.ALL) + list(faults_bench.ALL)
+            + list(async_bench.ALL) + list(faults_bench.ALL) \
+            + list(recovery_bench.ALL)
     benches += list(roofline.ALL)
 
     print("name,us_per_call,derived")

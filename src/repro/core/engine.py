@@ -72,6 +72,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core import async_agg as async_mod
 from repro.core import client_updates as cu
+from repro.core import lossbudget as bud_mod
 from repro.core import selection as sel_mod
 from repro.core import telemetry as tele_mod
 from repro.core.async_agg import ArrivalBuffer
@@ -80,10 +81,12 @@ from repro.core.mlp import mlp_weighted_loss
 from repro.core.tra import flatten_clients, unflatten_like
 from repro.data.synthetic import DeviceDataset, stage_on_device
 from repro.kernels.common import DENOM_EPS
+from repro.kernels.fec_recover import ops as fec_ops
 from repro.kernels.netsim_mask import ops as netsim_ops
 from repro.kernels.robust_agg import ops as robust_ops
 from repro.kernels.uplink_fused import ops as uplink_ops
 from repro.netsim import faults as faults_mod
+from repro.netsim import recovery as rec_mod
 from repro.netsim.bandwidth import logbw_round_step
 from repro.netsim.channel import ge_transition_probs
 from repro.netsim.delivery import (MAX_LATENESS, arrival_lateness,
@@ -136,6 +139,16 @@ class EngineState(NamedTuple):
     # otherwise — the default "off" compiles the subsystem out and is
     # locked bitwise vs the frozen PR-8 step (tests/_legacy_engine_v8).
     tele: TelemetryState
+    # downlink stale-model buffer: each client's last-RECEIVED model
+    # coordinates — the stale-parameter fallback source when downlink
+    # packets drop (netsim down_channel + down_fallback="stale").
+    # (0,) when the downlink model is off or fallback is zero-fill.
+    stale_model: jnp.ndarray = jnp.zeros((0,), jnp.float32)  # (N, D)
+    # adaptive loss-budget controller carries (core/lossbudget.py):
+    # per-client recovery escalation level (0=one_shot, 1=fec, 2=arq)
+    # and realized-loss EMA. (0,) unless lossbudget.enabled.
+    bud_level: jnp.ndarray = jnp.zeros((0,), jnp.float32)    # (N,)
+    bud_loss: jnp.ndarray = jnp.zeros((0,), jnp.float32)     # (N,)
 
 
 class ScenarioCtx(NamedTuple):
@@ -188,6 +201,20 @@ class ScenarioCtx(NamedTuple):
     d_screen: jnp.ndarray    # () f32 gate: finite-screen quarantine
     d_clip: jnp.ndarray      # () f32 clip norm (faults.CLIP_OFF = off)
     d_trim: jnp.ndarray      # () f32 gate: trimmed-mean aggregation
+    # downlink broadcast-loss knobs (netsim down_channel is static;
+    # unused-but-traced when the downlink model is off)
+    down_loss: jnp.ndarray   # () f32 nominal downlink drop rate
+    down_deadline_s: jnp.ndarray  # () f32 broadcast deadline (<=0 off)
+    # recovery-policy knobs (netsim/recovery.py; the policy is static,
+    # or traced as the one-hot below when cfg.recovery.traced)
+    rec_policy: jnp.ndarray  # (len(RECOVERY_POLICIES),) f32 one-hot
+    rec_retries: jnp.ndarray  # () f32 ARQ retry budget m
+    rec_backoff: jnp.ndarray  # () f32 ARQ per-resend time cost
+    # adaptive loss-budget controller knobs (core/lossbudget.py;
+    # ``enabled`` is static, these ride the trace)
+    bud_budget: jnp.ndarray  # () f32 realized-loss EMA ceiling
+    bud_ema: jnp.ndarray     # () f32 EMA coefficient beta
+    bud_div: jnp.ndarray     # () f32 update-norm divergence gate
 
 
 def gumbel_topk_select(key, eligible: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -230,7 +257,8 @@ def fused_debias_aggregate(xp: jnp.ndarray, pkt_mask: jnp.ndarray,
 SWEEP_VARYING_FIELDS = ("seed", "selection", "eligible_ratio")
 SWEEP_VARYING_TRA_FIELDS = ("loss_rate", "threshold_mbps")
 SWEEP_VARYING_NETSIM_FIELDS = ("burst_len", "good_loss", "bad_loss",
-                               "bw_rho", "deadline_s")
+                               "bw_rho", "deadline_s", "down_loss",
+                               "down_deadline_s")
 # selection-policy knobs (core/selection.py); the policy NAME joins
 # them when cfg.sel.traced (it rides ScenarioCtx as a one-hot then)
 SWEEP_VARYING_SEL_FIELDS = sel_mod.SWEEP_VARYING_SEL_FIELDS
@@ -241,6 +269,12 @@ SWEEP_VARYING_SRV_FIELDS = async_mod.SWEEP_VARYING_SRV_FIELDS
 # faults.enabled and defense.trim_k are static program structure
 SWEEP_VARYING_FAULT_FIELDS = faults_mod.SWEEP_VARYING_FAULT_FIELDS
 SWEEP_VARYING_DEF_FIELDS = faults_mod.SWEEP_VARYING_DEF_FIELDS
+# recovery-policy knobs (netsim/recovery.py); the policy NAME joins
+# them when cfg.recovery.traced (it rides ScenarioCtx as a one-hot)
+SWEEP_VARYING_REC_FIELDS = rec_mod.SWEEP_VARYING_REC_FIELDS
+# loss-budget controller knobs (core/lossbudget.py); only ``enabled``
+# is static program structure
+SWEEP_VARYING_BUD_FIELDS = bud_mod.SWEEP_VARYING_BUD_FIELDS
 
 
 def static_signature(cfg):
@@ -266,9 +300,18 @@ def static_signature(cfg):
     flt = dataclasses.replace(
         cfg.faults, **{f: 0.0 for f in SWEEP_VARYING_FAULT_FIELDS})
     dfn = dataclasses.replace(cfg.defense, **faults_mod.DEF_NEUTRAL)
+    rec = dataclasses.replace(
+        cfg.recovery, **{f: 0.0 for f in SWEEP_VARYING_REC_FIELDS})
+    if rec.traced:
+        # the recovery policy itself is traced (ScenarioCtx.rec_policy):
+        # traced configs share one program across all three policies
+        rec = dataclasses.replace(rec, policy="one_shot")
+    bud = dataclasses.replace(
+        cfg.lossbudget, **{f: 0.0 for f in SWEEP_VARYING_BUD_FIELDS})
     return dataclasses.replace(
         cfg, tra=tra, netsim=ns, sel=sel, srv=srv, faults=flt,
-        defense=dfn, seed=0, selection="all", eligible_ratio=1.0)
+        defense=dfn, recovery=rec, lossbudget=bud, seed=0,
+        selection="all", eligible_ratio=1.0)
 
 
 def _static_key(cfg):
@@ -284,7 +327,7 @@ def _static_key(cfg):
     return (dataclasses.astuple(dataclasses.replace(
         static_signature(cfg), n_rounds=0, eval_every=0, engine="scan")),
         uplink_ops.resolved_impl(), netsim_ops.resolved_impl(),
-        robust_ops.resolved_impl())
+        robust_ops.resolved_impl(), fec_ops.resolved_impl())
 
 
 # step/jit cache shared across engine instances: scenario-varying values
@@ -335,7 +378,8 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
     """
     N = n_clients
     params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
-    D = ravel_pytree(params)[0].shape[0]
+    vec0 = ravel_pytree(params)[0]
+    D = vec0.shape[0]
     # SCAFFOLD uploads (dw ++ dc) ride one TRA stream, so its EF
     # memory covers the concatenated 2D vector.
     up_dim = 2 * D if cfg.algo == "scaffold" else D
@@ -374,6 +418,16 @@ def init_engine_state(cfg, params, n_clients: int, *, base_key=None,
         and (cfg.sel.traced or cfg.sel.policy == "reputation_aware")
         else jnp.zeros((0,), jnp.float32),
         tele=tele_mod.init_telemetry_state(cfg.telemetry, N),
+        # every client starts having "received" the initial broadcast
+        # (training begins from a known, fully-delivered init)
+        stale_model=jnp.tile(vec0.astype(jnp.float32)[None, :], (N, 1))
+        if (cfg.netsim.down_channel != "off"
+            and cfg.netsim.down_fallback == "stale")
+        else jnp.zeros((0,), jnp.float32),
+        bud_level=jnp.zeros((N,), jnp.float32)
+        if cfg.lossbudget.enabled else jnp.zeros((0,), jnp.float32),
+        bud_loss=jnp.zeros((N,), jnp.float32)
+        if cfg.lossbudget.enabled else jnp.zeros((0,), jnp.float32),
     )
 
 
@@ -445,6 +499,25 @@ def validate_round_config(cfg) -> None:
             "selection policy 'reputation_aware' scores quarantine "
             "counts and requires faults.enabled=True (without the "
             "fault path nothing is ever quarantined)")
+    rec_cfg = cfg.recovery
+    use_rec = rec_cfg.traced or rec_cfg.policy != "one_shot"
+    if use_rec and not tra_cfg.enabled:
+        raise ValueError(
+            "recovery policies act on the lossy TRA uplink mask and "
+            "require tra.enabled=True (with TRA off, uploads are "
+            "reliable and there is nothing to recover)")
+    if cfg.lossbudget.enabled and not rec_cfg.traced:
+        raise ValueError(
+            "the loss-budget controller mixes recovery policies "
+            "per client and requires recovery.traced=True (all three "
+            "policies must be compiled into the step)")
+    if not traced_sel and policy == "recovery_pressure" \
+            and not cfg.lossbudget.enabled:
+        raise ValueError(
+            "selection policy 'recovery_pressure' scores the loss-"
+            "budget controller's escalation state and requires "
+            "lossbudget.enabled=True (without the controller there is "
+            "no pressure signal)")
 
 
 def make_round_step(cfg, cohort: int):
@@ -505,6 +578,25 @@ def make_round_step(cfg, cohort: int):
     # then bitwise the frozen PR-8 step (tests/_legacy_engine_v8.py).
     tele_cfg = cfg.telemetry
     tele_on = tele_cfg.level != "off"
+    # recovery-policy family (netsim/recovery.py): the policy (or
+    # "traced") and the FEC group size are static program structure;
+    # retries/backoff ride ScenarioCtx. ``use_rec`` compiles all three
+    # recovery paths in — the one_shot default compiles them OUT and
+    # is bitwise the frozen PR-9 step (tests/_legacy_engine_v9.py).
+    rec_cfg = cfg.recovery
+    use_rec = rec_cfg.traced or rec_cfg.policy != "one_shot"
+    rec_group = rec_cfg.group
+    n_pol = len(rec_mod.RECOVERY_POLICIES)
+    # adaptive loss-budget controller (core/lossbudget.py): enabled is
+    # the single static switch; budget/ema/div_gate are traced.
+    use_bud = cfg.lossbudget.enabled
+    # downlink broadcast loss (netsim): the channel choice and the
+    # fallback are static; down_loss / down_deadline_s are traced. The
+    # "off" default broadcasts losslessly — shared params, bitwise the
+    # frozen PR-9 step.
+    use_down = ns.down_channel != "off"
+    down_ge = ns.down_channel == "gilbert_elliott"
+    down_stale = ns.down_fallback == "stale"
 
     def step(ctx: ScenarioCtx, state: EngineState, t):
         dd = ctx.data
@@ -523,14 +615,40 @@ def make_round_step(cfg, cohort: int):
         P = n_packets(D_up, F)
         n_batch = C * steps * bs
         n_tra = 2 * C * P if use_ge else C * P
+        # recovery / downlink blocks are APPENDED after the legacy
+        # slices. NOTE: threefry uniforms are NOT prefix-stable in the
+        # total draw count, so what keeps the default programs bitwise
+        # is that their TOTAL is unchanged (n_rec = n_down = 0) — and
+        # what makes a traced recovery grid cell bitwise equal to its
+        # static single run is that both programs draw the SAME total
+        # (use_rec always draws both the ARQ and the parity blocks).
+        gn = rec_mod.fec_groups(P, rec_group) if use_rec else 0
+        n_rec = C * P + C * gn if use_rec else 0
+        P_dn = n_packets(D_model, F)
+        n_down = (2 * C * P_dn if down_ge else C * P_dn) \
+            if use_down else 0
         key = jax.random.fold_in(ctx.base_key, t)
-        u_all = jax.random.uniform(key, (N + n_batch + n_tra,),
-                                   minval=1e-12, maxval=1.0)
+        u_all = jax.random.uniform(
+            key, (N + n_batch + n_tra + n_rec + n_down,),
+            minval=1e-12, maxval=1.0)
         u_sel = u_all[:N]
         u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
         u_tra = u_all[N + n_batch:N + n_batch + C * P].reshape(C, P)
-        u_emit = u_all[N + n_batch + C * P:].reshape(C, P) \
+        u_emit = u_all[N + n_batch + C * P:
+                       N + n_batch + n_tra].reshape(C, P) \
             if use_ge else None
+        off = N + n_batch + n_tra
+        u_arq = u_par = None
+        if use_rec:
+            u_arq = u_all[off:off + C * P].reshape(C, P)
+            u_par = u_all[off + C * P:off + n_rec].reshape(C, gn)
+            off += n_rec
+        u_dt = u_de = None
+        if use_down:
+            u_dt = u_all[off:off + C * P_dn].reshape(C, P_dn)
+            if down_ge:
+                u_de = u_all[off + C * P_dn:
+                             off + 2 * C * P_dn].reshape(C, P_dn)
 
         # selection: weighted Gumbel-top-k over the eligibility mask.
         # Scores read the CARRY (previous round's channel/bandwidth/
@@ -545,7 +663,8 @@ def make_round_step(cfg, cohort: int):
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
                 channel=state.net.channel, stale_mem=state.stale_mem,
-                rep_mem=state.rep_mem, n_clients=N)
+                rep_mem=state.rep_mem, bud_level=state.bud_level,
+                bud_loss=state.bud_loss, n_clients=N)
         else:
             logits = sel_mod.policy_logits(
                 policy, temperature=ctx.sel_temp,
@@ -553,7 +672,8 @@ def make_round_step(cfg, cohort: int):
                 threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
                 gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
                 channel=state.net.channel, stale_mem=state.stale_mem,
-                rep_mem=state.rep_mem)
+                rep_mem=state.rep_mem, bud_level=state.bud_level,
+                bud_loss=state.bud_loss)
         ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
                                            C)
         counts = dd.counts[ids]                              # (C,)
@@ -568,7 +688,50 @@ def make_round_step(cfg, cohort: int):
         weights = w / w.sum()
         suff = ctx.sufficient[ids]
 
-        # local training (vmapped cohort)
+        # downlink broadcast: packetise the MODEL (D_model — scaffold's
+        # control variate broadcast stays lossless, the documented
+        # simplification), drop packets through the per-client downlink
+        # channel, and fall back per coordinate — "stale" keeps the
+        # client's last-received values (the stale_model carry),
+        # "zero" is the naive baseline. Clients then train from their
+        # own EFFECTIVE parameters instead of the shared broadcast.
+        net_down = state.net.down
+        eff_vec = None      # (C, D_model) per-client effective params
+        dn_frac = None      # realized downlink loss (telemetry)
+        if use_down:
+            if down_ge:
+                dp_gb, dp_bg = ge_transition_probs(
+                    ctx.down_loss, ctx.burst_len, ctx.good_loss,
+                    ctx.bad_loss)
+                dmask, ds_fin = netsim_ops.ge_packet_mask(
+                    u_dt, u_de, net_down[ids], dp_gb, dp_bg,
+                    ctx.good_loss, ctx.bad_loss)
+                net_down = net_down.at[ids].set(ds_fin)
+            else:
+                dmask = (u_dt >= ctx.down_loss).astype(jnp.float32)
+            if use_bw or use_dl:
+                # broadcast deadline: the whole model misses when
+                # pushing P_dn packets at the client's current
+                # (carried) bandwidth overruns the traced gate; <= 0
+                # disables. Without a bandwidth carry the knob is
+                # inert (see NetSimConfig).
+                dsecs = round_upload_seconds(
+                    P_dn, F, jnp.exp(state.net.logbw[ids]),
+                    ctx.down_loss, jnp.zeros((C,), bool))
+                dok = jnp.where(
+                    ctx.down_deadline_s > 0.0,
+                    deadline_delivered(dsecs, ctx.down_deadline_s),
+                    1.0)
+                dmask = dmask * dok[:, None]
+            coord_dn = jnp.repeat(dmask, F, axis=1)[:, :D_model]
+            stale_rows = state.stale_model[ids] if down_stale \
+                else jnp.zeros((C, D_model), jnp.float32)
+            eff_vec = coord_dn * old_vec[None, :] \
+                + (1.0 - coord_dn) * stale_rows
+            dn_frac = 1.0 - dmask.mean()
+
+        # local training (vmapped cohort; per-client effective params
+        # under downlink loss, the shared broadcast otherwise)
         if algo == "scaffold":
             c_global = unflatten_like(state.c_global, params)
 
@@ -576,15 +739,28 @@ def make_round_step(cfg, cohort: int):
                 ci = unflatten_like(ci_vec, params)
                 return cu.scaffold_local(p, x, y, c_global, ci, hyper)
 
-            uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
-                params, X, Y, state.c_i[ids])
+            if use_down:
+                uploads, aux = jax.vmap(
+                    lambda pv, x, y, ci_vec: loc(
+                        unflatten_like(pv, params), x, y, ci_vec),
+                    in_axes=(0, 0, 0, 0))(eff_vec, X, Y,
+                                          state.c_i[ids])
+            else:
+                uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                    params, X, Y, state.c_i[ids])
             dw = flatten_clients(uploads["dw"], C)
             dc = flatten_clients(uploads["dc"], C)
             flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
         else:
-            uploads, aux = jax.vmap(
-                lambda p, x, y: local(p, x, y, hyper),
-                in_axes=(None, 0, 0))(params, X, Y)
+            if use_down:
+                uploads, aux = jax.vmap(
+                    lambda pv, x, y: local(
+                        unflatten_like(pv, params), x, y, hyper),
+                    in_axes=(0, 0, 0))(eff_vec, X, Y)
+            else:
+                uploads, aux = jax.vmap(
+                    lambda p, x, y: local(p, x, y, hyper),
+                    in_axes=(None, 0, 0))(params, X, Y)
             flat = flatten_clients(uploads, C)               # (C, D)
 
         # client-level fault injection (repro/netsim/faults.py): what
@@ -615,6 +791,36 @@ def make_round_step(cfg, cohort: int):
             else ctx.loss_rate[ids]
         lr_col = lr_c if lr_c.ndim == 0 else lr_c[:, None]
         net_channel, net_logbw = state.net.channel, state.net.logbw
+
+        # recovery-policy family: applied to the CHANNEL mask (before
+        # the sufficiency override — sufficient clients retransmit and
+        # are all-ones regardless). All three policies are computed and
+        # mixed by a 0/1 one-hot; ``1*x + 0*y + 0*z == x`` bitwise for
+        # finite masks, so the one_shot cell of a traced grid equals
+        # the untraced one_shot program with the same draw totals, and
+        # the controller can pick per-CLIENT policies from the same
+        # expression.
+        rec_oh = None       # (C, n_pol) per-client policy one-hot
+        realized_c = None   # (C,) realized pre-recovery loss
+        fec_frac = arq_frac = None
+
+        def _apply_recovery(base_mask):
+            par_mask = rec_mod.fec_parity_mask(u_par, lr_col)
+            mask_fec = fec_ops.fec_recover(base_mask, par_mask,
+                                           group=rec_group)
+            mask_arq = rec_mod.arq_residual_mask(
+                base_mask, u_arq, lr_col, ctx.rec_retries)
+            oh = bud_mod.controller_policy_onehot(
+                state.bud_level[ids]) if use_bud \
+                else jnp.broadcast_to(ctx.rec_policy[None, :],
+                                      (C, n_pol))
+            mask_eff = oh[:, 0:1] * base_mask \
+                + oh[:, 1:2] * mask_fec + oh[:, 2:3] * mask_arq
+            stats = (oh, 1.0 - base_mask.mean(axis=1),
+                     (mask_fec - base_mask).mean(),
+                     (mask_arq - base_mask).mean())
+            return mask_eff, stats
+
         if use_ge:
             # bursty loss: advance each cohort client's two-state
             # channel by P packet-steps (kernels/netsim_mask; Pallas
@@ -628,14 +834,32 @@ def make_round_step(cfg, cohort: int):
                 u_tra, u_emit, net_channel[ids], p_gb, p_bg,
                 ctx.good_loss, ctx.bad_loss)
             net_channel = net_channel.at[ids].set(s_fin)
+            if use_rec:
+                ge_mask, (rec_oh, realized_c, fec_frac, arq_frac) = \
+                    _apply_recovery(ge_mask)
             pkt_mask = jnp.where(suff.astype(bool)[:, None], 1.0,
                                  ge_mask)
+        elif tra_cfg.enabled and use_rec:
+            chan_mask = (u_tra >= lr_col).astype(jnp.float32)
+            mask_eff, (rec_oh, realized_c, fec_frac, arq_frac) = \
+                _apply_recovery(chan_mask)
+            pkt_mask = jnp.where(suff.astype(bool)[:, None], 1.0,
+                                 mask_eff)
         elif tra_cfg.enabled:
             lost = (u_tra < lr_col) \
                 & ~suff.astype(bool)[:, None]
             pkt_mask = 1.0 - lost.astype(jnp.float32)
         else:
             pkt_mask = jnp.ones((C, P))
+
+        # debias rate: once recovery is compiled in, the group_rate
+        # estimator must divide by the POST-recovery residual rate
+        # (policy-mixed closed form) — correcting by the raw channel
+        # rate after ARQ repaired most losses over-inflates every
+        # insufficient client by 1/(1-r) and diverges. one_shot rows
+        # mix to exactly r, so that cell keeps the legacy estimator.
+        lr_deb = lr_c if not use_rec else rec_mod.residual_rate_mixed(
+            rec_oh, lr_c, ctx.rec_retries, rec_group)
 
         if use_bw:
             # time passes for every client, not just the cohort: one
@@ -653,8 +877,21 @@ def make_round_step(cfg, cohort: int):
             # (retransmitters push ~P/(1-r), TRA one-shots push P)
             retransmit = suff.astype(bool) if tra_cfg.enabled \
                 else jnp.ones((C,), bool)
-            secs = round_upload_seconds(P, F, jnp.exp(net_logbw[ids]),
-                                        lr_c, retransmit)
+            if use_rec:
+                # each policy pays its airtime: FEC ships 1 + 1/G
+                # model-equivalents, ARQ the expected retry traffic;
+                # retransmitters (sufficient clients) still pay the
+                # legacy P/(1-r) regardless of policy.
+                sends_pol = rec_oh[:, 0] * 1.0 \
+                    + rec_oh[:, 1] * rec_mod.fec_sends(rec_group) \
+                    + rec_oh[:, 2] * rec_mod.arq_sends(
+                        lr_c, ctx.rec_retries, ctx.rec_backoff)
+                secs = rec_mod.recovery_upload_seconds(
+                    P, F, jnp.exp(net_logbw[ids]), lr_c, retransmit,
+                    sends_pol)
+            else:
+                secs = round_upload_seconds(
+                    P, F, jnp.exp(net_logbw[ids]), lr_c, retransmit)
             delivered = deadline_delivered(secs, ctx.deadline_s)
             if need_stale or nonsync or tele_on:
                 lateness = arrival_lateness(secs, ctx.deadline_s)
@@ -746,8 +983,10 @@ def make_round_step(cfg, cohort: int):
         else:
             w_agg, mult, want_ssq = weights, None, False
         # gradient_norm selection scores next round's cohort by the
-        # masked norms the megakernel computes in this same pass
-        want_ssq = want_ssq or need_gnorm
+        # masked norms the megakernel computes in this same pass; the
+        # loss-budget controller reads the same norms as its
+        # divergence signal
+        want_ssq = want_ssq or need_gnorm or use_bud
         # non-sync modes fold the arrival weight into the aggregation
         # weights: zero-weight stragglers leave BOTH the numerator and
         # the denominator (the EF update and ssq are weight-free in
@@ -766,7 +1005,7 @@ def make_round_step(cfg, cohort: int):
                 screen=ctx.d_screen, clip_norm=ctx.d_clip,
                 trim_gate=ctx.d_trim, trim_k=trim_k,
                 ef_rows=state.ef_mem[ids] if ef else None,
-                sufficient=suff, loss_rate=lr_c, mult=mult,
+                sufficient=suff, loss_rate=lr_deb, mult=mult,
                 want_ssq=want_ssq)
             agg, new_ef_rows, ssq = rob.agg, rob.ef_rows, rob.ssq
             kept = rob.kept
@@ -775,7 +1014,7 @@ def make_round_step(cfg, cohort: int):
             agg, new_ef_rows, ssq = uplink_ops.uplink_round(
                 xp, pkt_mask, w_up, mode=debias, d_up=D_up,
                 ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
-                sufficient=suff, loss_rate=lr_c, mult=mult,
+                sufficient=suff, loss_rate=lr_deb, mult=mult,
                 want_ssq=want_ssq)
         new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
             else state.ef_mem
@@ -810,7 +1049,7 @@ def make_round_step(cfg, cohort: int):
             # occupying slots.
             q_full = uplink_ops.debias_client_scale(
                 w_agg, mode=debias, kept=kept, sufficient=suff,
-                loss_rate=lr_c, mult=mult)
+                loss_rate=lr_deb, mult=mult)
             coord_mask = jnp.repeat(loss_mask, F, axis=1)[:, :D_up]
             base_rows = flat + state.ef_mem[ids] if ef else flat
             if use_faults:
@@ -904,6 +1143,28 @@ def make_round_step(cfg, cohort: int):
         rep_new = state.rep_mem.at[ids].add(rob.qcnt / P) \
             if need_rep else state.rep_mem
 
+        # stale-parameter fallback memory: after this round, the
+        # client's local model IS eff_vec (received coords fresh, lost
+        # coords whatever it already had) — that's what a re-selected
+        # client resumes from next time its downlink drops.
+        stale_model_new = state.stale_model.at[ids].set(eff_vec) \
+            if (use_down and down_stale) else state.stale_model
+        # adaptive loss-budget controller: close the loop on the
+        # REALIZED pre-recovery loss and the update-norm divergence
+        # signal. The per-client policy used THIS round was read from
+        # bud_level before the update (clients commit a policy before
+        # the channel reveals itself); the EMA/level written here
+        # drives the NEXT selection of this client.
+        bud_level_new, bud_loss_new = state.bud_level, state.bud_loss
+        n_esc = lv = None
+        if use_bud:
+            lv, ema_new, n_esc = bud_mod.controller_update(
+                state.bud_level[ids], state.bud_loss[ids], realized_c,
+                ssq, budget=ctx.bud_budget, beta=ctx.bud_ema,
+                div_gate=ctx.bud_div)
+            bud_level_new = state.bud_level.at[ids].set(lv)
+            bud_loss_new = state.bud_loss.at[ids].set(ema_new)
+
         logs = {"loss": aux["loss0"].mean(), "ids": ids}
         if use_faults:
             # per-cohort-slot quarantined-packet counts — the
@@ -923,7 +1184,7 @@ def make_round_step(cfg, cohort: int):
         if tele_on:
             tele_scale = uplink_ops.debias_client_scale(
                 w_agg, mode=debias, kept=kept, sufficient=suff,
-                loss_rate=lr_c, mult=mult)
+                loss_rate=lr_deb, mult=mult)
             tlogs, new_tele = tele_mod.round_telemetry(
                 tele_cfg, state.tele, ids=ids, n_clients=N,
                 pkt_mask=pkt_mask, loss_mask=loss_mask,
@@ -935,13 +1196,20 @@ def make_round_step(cfg, cohort: int):
                 lateness=lateness if use_dl else None,
                 qcnt=rob.qcnt if use_faults else None,
                 buf_due=new_buf.due if use_buf else None,
-                buf_empty_due=async_mod.EMPTY_DUE)
+                buf_empty_due=async_mod.EMPTY_DUE,
+                down_frac=dn_frac,
+                fec_frac=fec_frac, arq_frac=arq_frac,
+                bud_escal=n_esc,
+                bud_level=lv.mean() if use_bud else None)
             logs.update(tlogs)
         new_state = EngineState(new_params, new_ef, c_global_new,
                                 c_i_new, lam_new,
-                                NetSimState(net_channel, net_logbw),
+                                NetSimState(net_channel, net_logbw,
+                                            net_down),
                                 gnorm_new, loss_new, stale_new,
-                                new_buf, echo_new, rep_new, new_tele)
+                                new_buf, echo_new, rep_new, new_tele,
+                                stale_model_new, bud_level_new,
+                                bud_loss_new)
         return new_state, logs
 
     return step
@@ -1028,7 +1296,16 @@ class RoundScanEngine:
             f_echo=jnp.float32(flt.echo_rate),
             d_screen=jnp.float32(1.0 if dfn.screen else 0.0),
             d_clip=jnp.float32(faults_mod.clip_knob(dfn)),
-            d_trim=jnp.float32(1.0 if dfn.trim else 0.0))
+            d_trim=jnp.float32(1.0 if dfn.trim else 0.0),
+            down_loss=jnp.float32(ns.down_loss),
+            down_deadline_s=jnp.float32(ns.down_deadline_s),
+            rec_policy=jnp.asarray(
+                rec_mod.recovery_onehot(cfg.recovery.policy)),
+            rec_retries=jnp.float32(cfg.recovery.retries),
+            rec_backoff=jnp.float32(cfg.recovery.backoff),
+            bud_budget=jnp.float32(cfg.lossbudget.budget),
+            bud_ema=jnp.float32(cfg.lossbudget.ema),
+            bud_div=jnp.float32(cfg.lossbudget.div_gate))
         self._step, self._single, self._block = _cached_jits(
             cfg, self.cohort)
 

@@ -1,0 +1,84 @@
+"""Adaptive loss-budget controller: per-client recovery escalation.
+
+The paper's loss-tolerance claim holds *below* a loss fraction; above
+it, silently keeping one_shot TRA biases the model toward well-
+connected clients. This controller closes the loop on device, riding
+the engine scan as two (N,) carries in ``EngineState``:
+
+  * ``bud_loss``  — per-client EMA of the realized channel loss (the
+    fraction of this round's packets the loss channel dropped, BEFORE
+    any recovery), beta = ``ema``.
+  * ``bud_level`` — the client's position on the recovery escalation
+    ladder ``netsim/recovery.RECOVERY_POLICIES``:
+    0 = one_shot -> 1 = fec -> 2 = arq.
+
+Each round, a cohort client's NEXT-round policy escalates one level
+when its loss EMA exceeds ``budget`` OR its masked update norm
+diverges from the cohort (ssq > div_gate * median ssq — the PR-9
+telemetry signal that a client's surviving update is no longer
+representative), and de-escalates below ``budget / 2`` (hysteresis, so
+a client sitting at the budget does not flap). The policy applied IN a
+round is the level chosen after the PREVIOUS observation — the
+controller acts like a real client, committing to a transmission
+scheme before the round's channel reveals itself.
+
+Knob split: ``enabled`` is static program structure (off compiles the
+controller out — the default is locked bitwise vs the frozen PR-9
+step); ``budget``, ``ema`` and ``div_gate`` are traced ScenarioCtx
+axes, so a budget sweep is one compiled program. The controller
+requires ``RecoveryConfig(traced=True)``: per-client policy mixing
+needs all three recovery paths compiled into the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels.common import DENOM_EPS
+from repro.netsim.recovery import RECOVERY_POLICIES
+
+N_LEVELS = len(RECOVERY_POLICIES)
+
+# scenario-varying LossBudgetConfig fields (ride ScenarioCtx)
+SWEEP_VARYING_BUD_FIELDS = ("budget", "ema", "div_gate")
+
+
+@dataclasses.dataclass(frozen=True)
+class LossBudgetConfig:
+    enabled: bool = False   # static: compiles the controller in/out
+    budget: float = 0.2     # traced: realized-loss EMA ceiling
+    ema: float = 0.3        # traced: EMA coefficient beta in (0, 1]
+    div_gate: float = 16.0  # traced: ssq > div_gate * median(ssq)
+    #                         counts as update-norm divergence
+
+
+def controller_policy_onehot(bud_level_c):
+    """(C,) carried levels -> (C, N_LEVELS) f32 one-hot of the policy
+    each cohort client committed to for THIS round."""
+    lv = jnp.clip(jnp.round(bud_level_c), 0.0, float(N_LEVELS - 1))
+    return (jnp.arange(N_LEVELS, dtype=jnp.float32)[None, :]
+            == lv[:, None]).astype(jnp.float32)
+
+
+def controller_update(bud_level_c, bud_loss_c, realized_c, ssq, *,
+                      budget, beta, div_gate):
+    """One controller step for the cohort.
+
+    bud_level_c / bud_loss_c: (C,) gathered carries; realized_c: (C,)
+    this round's channel loss fraction (pre-recovery); ssq: (C,)
+    masked squared update norms from the uplink pass. budget / beta /
+    div_gate are traced scalars.
+
+    Returns (new_level (C,), new_ema (C,), n_escalated ()).
+    """
+    ema_new = (1.0 - beta) * bud_loss_c + beta * realized_c
+    med = jnp.median(ssq)
+    diverged = ssq > div_gate * (med + DENOM_EPS)
+    over = (ema_new > budget) | diverged
+    under = (ema_new < 0.5 * budget) & ~diverged
+    lv = jnp.clip(bud_level_c + over.astype(jnp.float32)
+                  - under.astype(jnp.float32),
+                  0.0, float(N_LEVELS - 1))
+    n_escal = (lv > bud_level_c).astype(jnp.float32).sum()
+    return lv, ema_new, n_escal

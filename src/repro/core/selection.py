@@ -47,6 +47,15 @@ inputs:
                          the fault model accumulates per client);
                          requires ``FaultConfig.enabled`` — without
                          the fault path nothing is ever quarantined
+    recovery_pressure    s_i = log1p(level_i + ema_i) — prefer clients
+                         the loss-budget controller has escalated
+                         (``EngineState.bud_level`` / ``bud_loss``):
+                         once FEC/ARQ makes a lossy client's uploads
+                         recoverable, the server can afford to include
+                         it — the anti-bias counterpart of
+                         bandwidth_threshold. Requires
+                         ``LossBudgetConfig.enabled`` (the carries are
+                         zero-size otherwise)
 
 The knobs split exactly the way the engine splits all knobs:
 
@@ -92,7 +101,7 @@ from repro.network.trace import DEFAULT_THRESHOLD_MBPS
 
 POLICIES = ("uniform", "bandwidth_threshold", "gradient_norm",
             "loss_aware", "netsim_state", "staleness_aware",
-            "reputation_aware")
+            "reputation_aware", "recovery_pressure")
 
 # temperature guard: temperature=0 means "as hard as f32 allows", not
 # a NaN program
@@ -160,7 +169,8 @@ def select_clients(key, scores, eligible, k: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
                      gnorm_mem=None, loss_mem=None, channel=None,
-                     stale_mem=None, rep_mem=None):
+                     stale_mem=None, rep_mem=None, bud_level=None,
+                     bud_loss=None):
     """(N,) raw score s_i for one policy (None for ``uniform``).
 
     Inputs may be None when a policy's score source is absent (traced
@@ -204,19 +214,32 @@ def raw_policy_score(policy: str, *, threshold_mbps=None, logbw=None,
         # exclusion, so a client with one unlucky bit flip is not
         # starved forever the way a hard ban would
         return -jnp.log1p(rep_mem)
+    if policy == "recovery_pressure":
+        if bud_level is None or bud_level.shape[-1] == 0:
+            return None
+        # positive pressure score: escalated clients (high controller
+        # level and/or high realized-loss EMA) are PREFERRED — their
+        # uploads are now recoverable, so including them is cheap and
+        # undoes the well-connected selection bias. log1p keeps
+        # never-escalated clients at 0 and the scale commensurate with
+        # the other scores.
+        ema = jnp.zeros_like(bud_level) if bud_loss is None \
+            or bud_loss.shape[-1] == 0 else bud_loss
+        return jnp.log1p(bud_level + ema)
     raise ValueError(f"unknown selection policy {policy!r}")
 
 
 def policy_logits(policy: str, *, temperature, explore,
                   threshold_mbps=None, logbw=None, gnorm_mem=None,
                   loss_mem=None, channel=None, stale_mem=None,
-                  rep_mem=None):
+                  rep_mem=None, bud_level=None, bud_loss=None):
     """Effective Gumbel-top-k logits for one static policy
     (None ⇔ uniform sampling, the legacy-bitwise path)."""
     s = raw_policy_score(policy, threshold_mbps=threshold_mbps,
                          logbw=logbw, gnorm_mem=gnorm_mem,
                          loss_mem=loss_mem, channel=channel,
-                         stale_mem=stale_mem, rep_mem=rep_mem)
+                         stale_mem=stale_mem, rep_mem=rep_mem,
+                         bud_level=bud_level, bud_loss=bud_loss)
     if s is None:
         return None
     return (1.0 - explore) * s / jnp.maximum(temperature, TEMP_EPS)
@@ -225,19 +248,24 @@ def policy_logits(policy: str, *, temperature, explore,
 def traced_policy_logits(sel_policy, *, temperature, explore,
                          threshold_mbps, logbw=None, gnorm_mem=None,
                          loss_mem=None, channel=None, stale_mem=None,
-                         rep_mem=None, n_clients=None):
+                         rep_mem=None, bud_level=None, bud_loss=None,
+                         n_clients=None):
     """Logits with the POLICY ITSELF traced: every policy's raw score
     is computed and contracted with the (len(POLICIES),) one-hot
     ``sel_policy`` — so scenarios of one vmapped program can each run a
     different policy. With an exact one-hot the contraction reproduces
     the selected policy's logits (0·s_p contributes exactly 0 for
-    finite scores; all raw scores here are finite)."""
+    finite scores; all raw scores here are finite). Policies are only
+    ever APPENDED to ``POLICIES``: an extra trailing 0·s row adds a
+    bitwise-neutral +0.0 to the einsum, so older traced programs keep
+    their logits bit-for-bit."""
     rows = []
     for p in POLICIES:
         s = raw_policy_score(p, threshold_mbps=threshold_mbps,
                              logbw=logbw, gnorm_mem=gnorm_mem,
                              loss_mem=loss_mem, channel=channel,
-                             stale_mem=stale_mem, rep_mem=rep_mem)
+                             stale_mem=stale_mem, rep_mem=rep_mem,
+                             bud_level=bud_level, bud_loss=bud_loss)
         rows.append(jnp.zeros((n_clients,), jnp.float32)
                     if s is None else s)
     raw = jnp.einsum("p,pn->n", sel_policy, jnp.stack(rows))

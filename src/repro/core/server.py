@@ -38,6 +38,8 @@ from repro.core.fairness import FairnessReport, fairness_report
 from repro.core.mlp import mlp_accuracy, mlp_init
 from repro.core.sweep import SweepEngine
 from repro.core.tra import TRAConfig
+from repro.core import lossbudget as bud_mod
+from repro.netsim import recovery as rec_mod
 from repro.netsim.config import NetSimConfig
 from repro.netsim.faults import DefenseConfig, FaultConfig
 from repro.data.synthetic import (FederatedDataset, padded_eval_set,
@@ -95,6 +97,22 @@ class FLConfig:
     # sweep (it changes the compiled program).
     telemetry: TelemetryConfig = dataclasses.field(
         default_factory=TelemetryConfig)
+    # uplink recovery-policy family (repro/netsim/recovery.py):
+    # one_shot (default, the paper's TRA — bit-identical to the
+    # pre-recovery engine) | fec (XOR parity per group of G, any single
+    # loss per group repaired on device) | arq (bounded retransmits
+    # with traced retries/backoff; extra airtime feeds the deadline
+    # machinery). recovery.traced compiles the whole family into one
+    # program. Non-one_shot policies require tra.enabled.
+    recovery: "rec_mod.RecoveryConfig" = dataclasses.field(
+        default_factory=lambda: rec_mod.RecoveryConfig())
+    # adaptive loss-budget controller (core/lossbudget.py): per-client
+    # closed loop escalating one_shot -> fec -> arq when the realized
+    # loss EMA exceeds the budget or update norms diverge. Requires
+    # recovery.traced (the controller picks per-client policies from
+    # the traced family).
+    lossbudget: "bud_mod.LossBudgetConfig" = dataclasses.field(
+        default_factory=lambda: bud_mod.LossBudgetConfig())
     # algorithm hyper-parameters (paper / source-code defaults)
     q: float = 1.0                    # q-FedAvg fairness exponent
     # q-FedAvg Lipschitz estimate. Li et al. use 1/lr; with 10 local steps

@@ -46,25 +46,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import async_agg as async_mod
+from repro.core import lossbudget as bud_mod
 from repro.core import selection as sel_mod
 from repro.core import telemetry as tele_mod
 from repro.core import tra as tra_mod
 from repro.core.async_agg import AsyncConfig
-from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_DEF_FIELDS,
+from repro.core.engine import (ENGINE_ALGOS, SWEEP_VARYING_BUD_FIELDS,
+                               SWEEP_VARYING_DEF_FIELDS,
                                SWEEP_VARYING_FAULT_FIELDS,
                                SWEEP_VARYING_FIELDS,
                                SWEEP_VARYING_NETSIM_FIELDS,
+                               SWEEP_VARYING_REC_FIELDS,
                                SWEEP_VARYING_SEL_FIELDS,
                                SWEEP_VARYING_SRV_FIELDS,
                                SWEEP_VARYING_TRA_FIELDS, EngineState,
                                ScenarioCtx, _static_key,
                                init_engine_state, make_round_step,
                                static_signature)
+from repro.core.lossbudget import LossBudgetConfig
 from repro.core.mlp import mlp_init
 from repro.core.selection import SelectionConfig
 from repro.netsim import faults as faults_mod
+from repro.netsim import recovery as rec_mod
 from repro.netsim.config import NetSimConfig
 from repro.netsim.faults import DefenseConfig, FaultConfig
+from repro.netsim.recovery import RecoveryConfig
 from repro.data.synthetic import (DeviceDataset, FederatedDataset,
                                   stage_on_device,
                                   stage_scenarios_on_device)
@@ -106,6 +112,14 @@ class Scenario:
     # defense.trim_k are static and must agree across the sweep
     faults: Optional[FaultConfig] = None
     defense: Optional[DefenseConfig] = None
+    # recovery-policy scenario axis (None -> cfg.recovery): retries /
+    # backoff may vary per cell; the policy NAME may vary only when the
+    # sweep config is traced (cfg.recovery.traced — the one-hot rides
+    # ScenarioCtx.rec_policy); traced flag and group must agree
+    recovery: Optional[RecoveryConfig] = None
+    # loss-budget scenario axis (None -> cfg.lossbudget): budget / ema /
+    # div_gate may vary per cell; enabled is static and must agree
+    lossbudget: Optional[LossBudgetConfig] = None
     # per-client trace draws, needed when tra.per_client_loss or a
     # netsim bandwidth/deadline model is on
     packet_loss: Optional[np.ndarray] = None   # (N,) drop rates
@@ -130,6 +144,7 @@ def scenario_from_config(cfg, data: FederatedDataset,
                     sufficient=sufficient, eligible=eligible, data=data,
                     netsim=cfg.netsim, sel=cfg.sel, srv=cfg.srv,
                     faults=cfg.faults, defense=cfg.defense,
+                    recovery=cfg.recovery, lossbudget=cfg.lossbudget,
                     packet_loss=nets.packet_loss,
                     upload_mbps=nets.upload_mbps)
 
@@ -183,9 +198,11 @@ class SweepEngine:
             s.netsim if s.netsim is not None else cfg.netsim
             for s in self.scenarios]
         for i, ns in enumerate(nsims):
-            if (ns.channel, ns.bw_ar1, ns.deadline) != \
+            if (ns.channel, ns.bw_ar1, ns.deadline, ns.down_channel,
+                    ns.down_fallback) != \
                     (cfg.netsim.channel, cfg.netsim.bw_ar1,
-                     cfg.netsim.deadline):
+                     cfg.netsim.deadline, cfg.netsim.down_channel,
+                     cfg.netsim.down_fallback):
                 raise ValueError(
                     f"scenario {i} selects different netsim models "
                     f"than the sweep config; only "
@@ -251,6 +268,34 @@ class SweepEngine:
                     f"/ defense.trim_k than the sweep config; only "
                     f"faults.{SWEEP_VARYING_FAULT_FIELDS} and defense."
                     f"{SWEEP_VARYING_DEF_FIELDS} may vary per cell")
+        # per-scenario recovery knobs (traced flag and FEC group are
+        # static program structure; with traced=True the policy itself
+        # becomes the per-scenario one-hot)
+        recs = self._recs = [
+            s.recovery if s.recovery is not None else cfg.recovery
+            for s in self.scenarios]
+        for i, rc in enumerate(recs):
+            ok = rc.traced == cfg.recovery.traced \
+                and rc.group == cfg.recovery.group \
+                and (cfg.recovery.traced
+                     or rc.policy == cfg.recovery.policy)
+            if not ok:
+                raise ValueError(
+                    f"scenario {i} selects a different recovery "
+                    f"policy / traced flag / FEC group than the sweep "
+                    f"config; only {SWEEP_VARYING_REC_FIELDS} may vary "
+                    f"per cell (the policy itself only with "
+                    f"recovery.traced=True)")
+        # per-scenario loss-budget knobs (enabled is static structure)
+        buds = self._buds = [
+            s.lossbudget if s.lossbudget is not None else cfg.lossbudget
+            for s in self.scenarios]
+        for i, bc in enumerate(buds):
+            if bc.enabled != cfg.lossbudget.enabled:
+                raise ValueError(
+                    f"scenario {i} toggles lossbudget.enabled against "
+                    f"the sweep config; only {SWEEP_VARYING_BUD_FIELDS} "
+                    f"may vary per cell")
         need_bw_score = cfg.sel.traced \
             or cfg.sel.policy == "bandwidth_threshold"
         if need_bw_score \
@@ -315,7 +360,22 @@ class SweepEngine:
             d_clip=jnp.asarray([faults_mod.clip_knob(df)
                                 for df in dfns], jnp.float32),
             d_trim=jnp.asarray([1.0 if df.trim else 0.0
-                                for df in dfns], jnp.float32))
+                                for df in dfns], jnp.float32),
+            down_loss=jnp.asarray([ns.down_loss for ns in nsims],
+                                  jnp.float32),
+            down_deadline_s=jnp.asarray(
+                [ns.down_deadline_s for ns in nsims], jnp.float32),
+            rec_policy=jnp.asarray(np.stack(
+                [rec_mod.recovery_onehot(rc.policy) for rc in recs])),
+            rec_retries=jnp.asarray([rc.retries for rc in recs],
+                                    jnp.float32),
+            rec_backoff=jnp.asarray([rc.backoff for rc in recs],
+                                    jnp.float32),
+            bud_budget=jnp.asarray([bc.budget for bc in buds],
+                                   jnp.float32),
+            bud_ema=jnp.asarray([bc.ema for bc in buds], jnp.float32),
+            bud_div=jnp.asarray([bc.div_gate for bc in buds],
+                                jnp.float32))
         cache_key = (_static_key(cfg), self.cohort, self.data_batched)
         hit = cache_key in _SWEEP_CACHE
         fp = tele_mod.REGISTRY.record_lookup("sweep", cache_key, hit=hit)
@@ -332,7 +392,11 @@ class SweepEngine:
                                    stale_alpha=0, grace_s=0,
                                    f_corrupt=0, f_cscale=0, f_bitflip=0,
                                    f_fail=0, f_flip=0, f_echo=0,
-                                   d_screen=0, d_clip=0, d_trim=0)
+                                   d_screen=0, d_clip=0, d_trim=0,
+                                   down_loss=0, down_deadline_s=0,
+                                   rec_policy=0, rec_retries=0,
+                                   rec_backoff=0, bud_budget=0,
+                                   bud_ema=0, bud_div=0)
             vstep = jax.vmap(step, in_axes=(ctx_axes, 0, None))
             _SWEEP_CACHE[cache_key] = (step, tele_mod.TimedProgram(
                 jax.jit(
@@ -366,10 +430,12 @@ class SweepEngine:
                     f"{SWEEP_VARYING_NETSIM_FIELDS}, sel."
                     f"{SWEEP_VARYING_SEL_FIELDS}, srv."
                     f"{SWEEP_VARYING_SRV_FIELDS}, faults."
-                    f"{SWEEP_VARYING_FAULT_FIELDS} and defense."
-                    f"{SWEEP_VARYING_DEF_FIELDS} (plus sel.policy / "
-                    f"srv.mode under their traced=True) may vary in "
-                    f"one sweep")
+                    f"{SWEEP_VARYING_FAULT_FIELDS}, defense."
+                    f"{SWEEP_VARYING_DEF_FIELDS}, recovery."
+                    f"{SWEEP_VARYING_REC_FIELDS} and lossbudget."
+                    f"{SWEEP_VARYING_BUD_FIELDS} (plus sel.policy / "
+                    f"srv.mode / recovery.policy under their "
+                    f"traced=True) may vary in one sweep")
         if isinstance(datas, FederatedDataset):
             datas = [datas] * S
         if len(datas) != S:
@@ -394,6 +460,7 @@ class SweepEngine:
                          eligible=eligible[i], data=d,
                          netsim=c.netsim, sel=c.sel, srv=c.srv,
                          faults=c.faults, defense=c.defense,
+                         recovery=c.recovery, lossbudget=c.lossbudget,
                          packet_loss=n.packet_loss,
                          upload_mbps=n.upload_mbps)
                 for i, (c, d, n) in enumerate(zip(cfgs, datas, nets))]

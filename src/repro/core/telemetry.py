@@ -127,7 +127,12 @@ def round_telemetry(tcfg: TelemetryConfig, tele: TelemetryState, *,
                     lateness: Optional[jnp.ndarray] = None,
                     qcnt: Optional[jnp.ndarray] = None,
                     buf_due: Optional[jnp.ndarray] = None,
-                    buf_empty_due: float = 0.0):
+                    buf_empty_due: float = 0.0,
+                    down_frac: Optional[jnp.ndarray] = None,
+                    fec_frac: Optional[jnp.ndarray] = None,
+                    arq_frac: Optional[jnp.ndarray] = None,
+                    bud_escal: Optional[jnp.ndarray] = None,
+                    bud_level: Optional[jnp.ndarray] = None):
     """Per-round telemetry, computed from signals the round already
     produced. Called ONLY when the level is not "off" (the caller
     compiles the whole call out otherwise).
@@ -167,6 +172,21 @@ def round_telemetry(tcfg: TelemetryConfig, tele: TelemetryState, *,
         logs["tele/quar_frac"] = qcnt.sum() / (C * P)
     if buf_due is not None and buf_due.shape[0] > 0:
         logs["tele/buf_fill"] = (buf_due < buf_empty_due).mean()
+    # full-duplex / recovery signals (PR-10): realized downlink drop
+    # fraction, packet fractions the FEC parity prepass and the ARQ
+    # retries recovered, and the loss-budget controller's escalation
+    # count and mean policy level. All None-gated so v9 call sites
+    # produce identical logs (keys absent, not zero).
+    if down_frac is not None:
+        logs["tele/downlink_loss"] = down_frac
+    if fec_frac is not None:
+        logs["tele/fec_recovered"] = fec_frac
+    if arq_frac is not None:
+        logs["tele/arq_recovered"] = arq_frac
+    if bud_escal is not None:
+        logs["tele/budget_escalations"] = bud_escal
+    if bud_level is not None:
+        logs["tele/rec_level_mean"] = bud_level
 
     if tcfg.level == "full":
         tele = TelemetryState(
@@ -195,6 +215,11 @@ _SCALAR_KEYS = {
     "tele/arrival_mean": "arrival_mean",
     "tele/quar_frac": "quar_frac",
     "tele/buf_fill": "buf_fill",
+    "tele/downlink_loss": "downlink_loss",
+    "tele/fec_recovered": "fec_recovered",
+    "tele/arq_recovered": "arq_recovered",
+    "tele/budget_escalations": "budget_escalations",
+    "tele/rec_level_mean": "rec_level_mean",
 }
 _VECTOR_KEYS = {
     "tele/part_quartile": "part_quartile",

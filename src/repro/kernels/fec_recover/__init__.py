@@ -1,0 +1,1 @@
+"""On-device FEC group-parity repair of packet delivery masks."""

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fec_recover kernel: XOR-parity group repair
+as a reshape + per-group reduction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fec_recover_ref(mask, parity, group: int):
+    """mask: (C, P) f32 delivery mask (1 = delivered); parity: (C, Gn)
+    f32 parity-packet delivery mask, Gn = ceil(P / group).
+
+    A group of ``group`` consecutive data packets with EXACTLY one loss
+    is repaired when its parity packet arrived (XOR of the group
+    reconstructs the single missing packet; two or more losses are
+    unrecoverable with one parity). Returns the repaired (C, P) mask —
+    entries only ever flip 0 -> 1.
+    """
+    C, P = mask.shape
+    gn = parity.shape[1]
+    pad = gn * group - P
+    m = jnp.pad(mask, ((0, 0), (0, pad)), constant_values=1.0) \
+        .reshape(C, gn, group)
+    n_lost = (1.0 - m).sum(axis=2)                       # (C, Gn)
+    repair = (n_lost == 1.0) & (parity > 0.5)            # (C, Gn)
+    out = jnp.where(repair[:, :, None] & (m < 0.5), 1.0, m)
+    return out.reshape(C, gn * group)[:, :P]

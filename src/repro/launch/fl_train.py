@@ -474,6 +474,20 @@ def main(argv=None):
                     help="w(tau) = (1+tau)^(-alpha) staleness discount")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="async arrival-buffer slots (earliest-due win)")
+    ap.add_argument("--recovery", default="one_shot",
+                    choices=("one_shot", "fec", "arq"),
+                    help="uplink recovery policy, mirrored at the RATE "
+                         "level: the launch routes apply the policy's "
+                         "closed-form residual loss rate "
+                         "(netsim/recovery.residual_loss_rate) to the "
+                         "TRA channel instead of simulating packet-"
+                         "level parity/retries — the engine "
+                         "(cfg.recovery) owns the exact per-packet "
+                         "semantics")
+    ap.add_argument("--arq-retries", type=float, default=2.0,
+                    help="max ARQ retransmit rounds (--recovery arq)")
+    ap.add_argument("--fec-group", type=int, default=8,
+                    help="FEC parity group size G (--recovery fec)")
     ap.add_argument("--sweep-loss-rates", default=None,
                     help="comma-separated TRA loss rates, e.g. "
                          "'0.0,0.1,0.3': train all scenarios at once as "
@@ -505,6 +519,20 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     tcfg = TrainConfig(lr=args.lr)
+    if args.recovery != "one_shot":
+        from repro.netsim.recovery import residual_loss_rate
+        eff = float(residual_loss_rate(
+            args.recovery, args.loss_rate,
+            retries=args.arq_retries, group=args.fec_group))
+        print(f"recovery={args.recovery}: nominal loss "
+              f"{args.loss_rate:.3f} -> residual {eff:.5f}", flush=True)
+        args.loss_rate = eff
+        if args.sweep_loss_rates:
+            rates = [float(x) for x in args.sweep_loss_rates.split(",")]
+            args.sweep_loss_rates = ",".join(
+                str(float(residual_loss_rate(
+                    args.recovery, r, retries=args.arq_retries,
+                    group=args.fec_group))) for r in rates)
     tra = TRAConfig(loss_rate=args.loss_rate, debias=args.debias)
     if args.profile_dir:
         jax.profiler.start_trace(args.profile_dir)

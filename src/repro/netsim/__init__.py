@@ -1,13 +1,16 @@
 """Stateful network simulator: bursty Gilbert–Elliott loss, AR(1)
-time-varying bandwidth and deadline-based delivery as first-class,
-sweepable scenario axes (see docs/ARCHITECTURE.md §netsim)."""
+time-varying bandwidth, deadline-based delivery, downlink broadcast
+loss and the recovery-policy family as first-class, sweepable scenario
+axes (see docs/ARCHITECTURE.md §netsim / §full-duplex)."""
 from repro.netsim.bandwidth import (BW_FOLD, init_logbw,
                                     logbw_round_step)
-from repro.netsim.channel import (CH_INIT_FOLD, ge_transition_probs,
+from repro.netsim.channel import (CH_INIT_FOLD, DOWN_INIT_FOLD,
+                                  ge_transition_probs,
                                   init_channel_state,
                                   sample_ge_mask_numpy,
                                   stationary_bad_frac)
-from repro.netsim.config import CHANNELS, NetSimConfig
+from repro.netsim.config import (CHANNELS, DOWN_CHANNELS,
+                                 DOWN_FALLBACKS, NetSimConfig)
 from repro.netsim.delivery import (INFEASIBLE_SECS, MAX_LATENESS,
                                    arrival_lateness, deadline_delivered,
                                    grace_staleness, round_upload_seconds)
@@ -15,15 +18,25 @@ from repro.netsim.faults import (CLIP_OFF, FAULT_FOLD, DefenseConfig,
                                  FaultConfig, clip_knob,
                                  inject_client_faults,
                                  inject_packet_faults)
+from repro.netsim.recovery import (RECOVERY_POLICIES, RecoveryConfig,
+                                   arq_residual_mask, arq_sends,
+                                   fec_groups, fec_parity_mask,
+                                   fec_sends, recovery_onehot,
+                                   recovery_upload_seconds,
+                                   residual_loss_rate, retransmit_sends)
 from repro.netsim.state import NetSimState, init_net_state
 
 __all__ = [
-    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "CLIP_OFF", "DefenseConfig",
-    "FAULT_FOLD", "FaultConfig", "INFEASIBLE_SECS",
-    "MAX_LATENESS", "NetSimConfig", "NetSimState", "arrival_lateness",
-    "clip_knob", "deadline_delivered", "ge_transition_probs",
-    "grace_staleness", "init_channel_state", "init_logbw",
-    "init_net_state", "inject_client_faults", "inject_packet_faults",
-    "logbw_round_step", "round_upload_seconds", "sample_ge_mask_numpy",
+    "BW_FOLD", "CH_INIT_FOLD", "CHANNELS", "CLIP_OFF", "DOWN_CHANNELS",
+    "DOWN_FALLBACKS", "DOWN_INIT_FOLD", "DefenseConfig", "FAULT_FOLD",
+    "FaultConfig", "INFEASIBLE_SECS", "MAX_LATENESS", "NetSimConfig",
+    "NetSimState", "RECOVERY_POLICIES", "RecoveryConfig",
+    "arq_residual_mask", "arq_sends", "arrival_lateness", "clip_knob",
+    "deadline_delivered", "fec_groups", "fec_parity_mask", "fec_sends",
+    "ge_transition_probs", "grace_staleness", "init_channel_state",
+    "init_logbw", "init_net_state", "inject_client_faults",
+    "inject_packet_faults", "logbw_round_step", "recovery_onehot",
+    "recovery_upload_seconds", "residual_loss_rate",
+    "retransmit_sends", "round_upload_seconds", "sample_ge_mask_numpy",
     "stationary_bad_frac",
 ]

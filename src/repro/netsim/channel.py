@@ -42,6 +42,10 @@ from repro.kernels.common import RATE_EPS
 # far outside the round-index range works (rounds are < 2**20), it just
 # must never collide with a ``fold_in(base_key, t)`` round key.
 CH_INIT_FOLD = 0x4E455453  # "NETS"
+# distinguished fold for the DOWNLINK channel-state init — distinct
+# from CH_INIT_FOLD so the uplink and downlink chains never share a
+# draw, and from FAULT_FOLD/BW_FOLD for the same reason.
+DOWN_INIT_FOLD = 0x444F574E  # "DOWN"
 
 
 def stationary_bad_frac(loss_rate, good_loss, bad_loss):

@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 
 CHANNELS = ("iid", "gilbert_elliott")
+DOWN_CHANNELS = ("off", "iid", "gilbert_elliott")
+DOWN_FALLBACKS = ("stale", "zero")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +45,23 @@ class NetSimConfig:
     # -- deadline / straggler delivery -------------------------------------
     deadline: bool = False      # drop whole uploads that miss the deadline
     deadline_s: float = 60.0    # per-round upload deadline (seconds)
+    # -- downlink (server -> client broadcast) loss -------------------------
+    # The broadcast model is packetised like the uplink; lost packets
+    # fall back per ``down_fallback``: "stale" keeps the client's
+    # last-received coordinate values (the (N, D) stale-model buffer in
+    # EngineState), "zero" is the naive zero-fill baseline the headline
+    # robustness test shows diverging. ``down_channel`` is static
+    # (program structure; GE reuses burst_len/good_loss/bad_loss);
+    # ``down_loss`` / ``down_deadline_s`` are traced scenario axes.
+    down_channel: str = "off"   # "off" | "iid" | "gilbert_elliott"
+    down_fallback: str = "stale"  # "stale" | "zero"
+    down_loss: float = 0.1      # nominal downlink per-packet drop rate
+    down_deadline_s: float = 0.0  # broadcast deadline (seconds);
+    #                               <= 0 disables the gate. Gated on
+    #                               the bandwidth carry, so it needs
+    #                               bw_ar1 or deadline to be active.
 
     def __post_init__(self):
         assert self.channel in CHANNELS, self.channel
+        assert self.down_channel in DOWN_CHANNELS, self.down_channel
+        assert self.down_fallback in DOWN_FALLBACKS, self.down_fallback

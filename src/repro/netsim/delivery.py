@@ -39,6 +39,9 @@ import jax.numpy as jnp
 from repro.kernels.common import RATE_EPS
 
 PACKET_BYTES_PER_FLOAT = 4  # f32 payload coordinates
+# the retransmit expected-sends formula lives with the other recovery
+# policies now (netsim/recovery.py); imported lazily inside
+# round_upload_seconds to keep this module import-cycle-free
 
 # finite arrival-time sentinel for infeasible uploads (no/zero/NaN
 # bandwidth): later than any sane deadline, still f32-finite so
@@ -58,11 +61,9 @@ def round_upload_seconds(n_pkts: int, packet_floats: int, mbps,
     Degenerate inputs (mbps <= 0 or nonfinite, loss_rate outside
     [0, 1] or NaN) yield the finite ``INFEASIBLE_SECS`` sentinel
     instead of NaN/inf."""
+    from repro.netsim.recovery import retransmit_sends
     bits = float(n_pkts * packet_floats * PACKET_BYTES_PER_FLOAT * 8)
-    r = jnp.clip(loss_rate, 0.0, 1.0)
-    sends = jnp.where(retransmit,
-                      1.0 / jnp.maximum(1.0 - r, RATE_EPS),
-                      1.0)
+    sends = jnp.where(retransmit, retransmit_sends(loss_rate), 1.0)
     secs = bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
     ok = jnp.isfinite(secs) & (secs > 0.0) \
         & jnp.isfinite(mbps) & (mbps > 0.0)

@@ -1,0 +1,228 @@
+"""Loss-recovery policy family: one_shot (TRA) / fec / arq.
+
+The paper's throw-right-away scheme (TRA) is ONE point in the recovery
+design space: a client that loses packets may also spend uplink budget
+recovering them. This module makes that choice a first-class policy a
+client (or the adaptive loss-budget controller, core/lossbudget.py)
+can pick per round:
+
+  * ``one_shot`` — TRA, the bit-exact legacy path: lost packets stay
+    lost, the debias machinery corrects the aggregate in expectation.
+  * ``fec``      — forward error correction: one XOR parity packet per
+    group of G data packets. Any group with EXACTLY one data loss and
+    a delivered parity is repaired on device (kernels/fec_recover)
+    before the uplink megakernel sees the mask. Costs a fixed 1 + 1/G
+    bandwidth inflation, adds no latency.
+  * ``arq``      — bounded retransmission: each lost packet is retried
+    up to ``retries`` times (still lost w.p. r each attempt, so the
+    residual per-packet loss is r^(1+retries)); the expected extra
+    sends sum_{k=1..m} r^k inflate the upload time by ``backoff`` per
+    resend, feeding the existing deadline/staleness machinery — ARQ
+    trades loss for lateness.
+
+Knob split (the engine-wide convention): the policy NAME and the FEC
+group size are static program structure — except under
+``RecoveryConfig(traced=True)``, where the policy rides ScenarioCtx as
+a one-hot and a recovery × loss-rate grid compiles to ONE program.
+``retries`` and ``backoff`` are always traced.
+
+This module also owns the retransmit expected-sends formula
+``1/(1-r)`` hoisted out of ``netsim/delivery.py`` (same expression,
+same ``RATE_EPS`` saturation at r → 1 — the legacy path is locked
+bitwise by tests/test_recovery.py) and host-side numpy oracles for the
+property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import RATE_EPS
+
+# escalation ladder order: the loss-budget controller walks levels
+# 0 -> 1 -> 2 (one_shot -> fec -> arq) as realized loss exceeds budget
+RECOVERY_POLICIES = ("one_shot", "fec", "arq")
+
+# scenario-varying RecoveryConfig fields (ride ScenarioCtx; a sweep may
+# grid over them without recompiling). The policy joins them when
+# ``traced`` (it becomes the ScenarioCtx one-hot then).
+SWEEP_VARYING_REC_FIELDS = ("retries", "backoff")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryConfig:
+    policy: str = "one_shot"  # static, unless ``traced``
+    traced: bool = False      # policy one-hot rides ScenarioCtx; all
+    #                           three recovery paths compile into one
+    #                           program (required by the controller)
+    group: int = 8            # static FEC group size G (parity per G)
+    retries: float = 2.0      # traced: ARQ retry budget m per packet
+    backoff: float = 1.0      # traced: upload-time cost per resend
+    #                           (1.0 = a resend costs a full send)
+
+    def __post_init__(self):
+        assert self.policy in RECOVERY_POLICIES, self.policy
+        assert self.group >= 2, "FEC needs a group of at least 2"
+
+
+def recovery_onehot(policy: str) -> np.ndarray:
+    """(len(RECOVERY_POLICIES),) f32 one-hot for ScenarioCtx."""
+    oh = np.zeros((len(RECOVERY_POLICIES),), np.float32)
+    oh[RECOVERY_POLICIES.index(policy)] = 1.0
+    return oh
+
+
+def retransmit_sends(loss_rate):
+    """Expected sends per packet under unbounded retransmission: the
+    geometric expectation 1/(1-r), saturating at ``1/RATE_EPS`` as
+    r → 1 instead of overflowing. Hoisted verbatim from
+    ``delivery.round_upload_seconds`` (which now calls this) — the
+    clip is idempotent, so pre-clipped callers are bitwise unchanged."""
+    r = jnp.clip(loss_rate, 0.0, 1.0)
+    return 1.0 / jnp.maximum(1.0 - r, RATE_EPS)
+
+
+# -- ARQ ---------------------------------------------------------------------
+
+def arq_residual_mask(mask, u_rec, loss_rate, retries):
+    """(C, P) delivery mask after bounded retransmission.
+
+    A packet the channel lost stays lost only if all ``retries``
+    resends fail too — iid failures at rate r, so P(still lost | lost)
+    = r^m. ``u_rec`` is a fresh (C, P) uniform block (drawn per packet
+    whether or not it was lost, so the draw layout is
+    policy-independent); ``loss_rate`` broadcasts (scalar or (C, 1)).
+    retries=0 degrades to one_shot exactly (r^0 = 1)."""
+    r = jnp.clip(loss_rate, 0.0, 1.0)
+    m = jnp.maximum(retries, 0.0)
+    still_lost = u_rec < jnp.power(r, m)
+    recovered = (mask < 0.5) & ~still_lost
+    return jnp.where(recovered, 1.0, mask)
+
+
+def arq_sends(loss_rate, retries, backoff):
+    """Expected sends per packet under m-bounded retransmission:
+    1 + backoff * sum_{k=1..m} r^k. The partial geometric sum
+    r(1-r^m)/(1-r) saturates to its analytic limit m at r → 1
+    (RATE_EPS guard + explicit limit branch — never exceeds m, never
+    NaN)."""
+    r = jnp.clip(loss_rate, 0.0, 1.0)
+    m = jnp.maximum(retries, 0.0)
+    geo = r * (1.0 - jnp.power(r, m)) / jnp.maximum(1.0 - r, RATE_EPS)
+    extra = jnp.where(r > 1.0 - RATE_EPS, m, jnp.minimum(geo, m))
+    return 1.0 + jnp.maximum(backoff, 0.0) * extra
+
+
+# -- FEC ---------------------------------------------------------------------
+
+def fec_groups(n_pkts: int, group: int) -> int:
+    """Number of parity packets (= groups) covering P data packets."""
+    return -(-n_pkts // group)
+
+
+def fec_sends(group: int) -> float:
+    """Bandwidth inflation of FEC: one parity packet per G data."""
+    return 1.0 + 1.0 / float(group)
+
+
+def fec_parity_mask(u_par, loss_rate):
+    """(C, Gn) f32 parity-packet delivery mask: parities ride the same
+    uplink, modelled iid at the nominal rate (the documented
+    simplification — a parity inside a burst is no safer than data)."""
+    return (u_par >= jnp.clip(loss_rate, 0.0, 1.0)) \
+        .astype(jnp.float32)
+
+
+def recovery_upload_seconds(n_pkts: int, packet_floats: int, mbps,
+                            loss_rate, retransmit, policy_sends):
+    """``delivery.round_upload_seconds`` with the non-retransmitting
+    clients' send count supplied by the recovery policy instead of
+    pinned at 1 (one_shot rows pass policy_sends=1 and are bitwise the
+    legacy expression). Same degenerate-input contract: finite always,
+    ``INFEASIBLE_SECS`` on bad bandwidth."""
+    from repro.netsim.delivery import (INFEASIBLE_SECS,
+                                       PACKET_BYTES_PER_FLOAT)
+    bits = float(n_pkts * packet_floats * PACKET_BYTES_PER_FLOAT * 8)
+    sends = jnp.where(retransmit, retransmit_sends(loss_rate),
+                      policy_sends)
+    secs = bits * sends / (jnp.maximum(mbps, RATE_EPS) * 1e6)
+    ok = jnp.isfinite(secs) & (secs > 0.0) \
+        & jnp.isfinite(mbps) & (mbps > 0.0)
+    return jnp.where(ok, secs, INFEASIBLE_SECS)
+
+
+def residual_rate_mixed(onehot, loss_rate, retries, group: int):
+    """Device-side policy-mixed post-recovery residual rate.
+
+    ``onehot`` (..., 3) selects among the closed forms of
+    ``residual_loss_rate`` (one_shot r, fec r·(1-(1-r)^G), arq
+    r^(1+m)); ``loss_rate`` broadcasts (scalar or per-client). This is
+    what the group_rate debias estimator must divide by once recovery
+    is compiled in — correcting by the RAW channel rate after ARQ has
+    repaired most losses over-inflates every insufficient client by
+    1/(1-r) and diverges. A one_shot row mixes to
+    ``1·r + 0·r_fec + 0·r_arq``, bitwise ``r`` (finite 0-products), so
+    one_shot cells keep the legacy estimator exactly."""
+    r = jnp.clip(loss_rate, 0.0, 1.0)
+    m = jnp.maximum(retries, 0.0)
+    r_fec = r * (1.0 - jnp.power(1.0 - r, group))
+    r_arq = jnp.power(r, 1.0 + m)
+    return (onehot[..., 0] * r + onehot[..., 1] * r_fec
+            + onehot[..., 2] * r_arq)
+
+
+def residual_loss_rate(policy: str, loss_rate, *, retries: float = 2.0,
+                       group: int = 8):
+    """Host-side closed form of the post-recovery per-packet loss rate
+    (numpy/float in, float out) — the rate-level mirror the fl_train
+    CLI and the benchmarks use:
+
+      one_shot: r
+      arq:      r^(1+m)                  (initial send + m retries)
+      fec:      r * (1 - (1-r)^G)        (lost AND not sole loss with
+                                          parity: recovery needs the
+                                          G-1 peers and the parity all
+                                          delivered, each w.p. 1-r)
+    """
+    r = float(np.clip(loss_rate, 0.0, 1.0))
+    if policy == "one_shot":
+        return r
+    if policy == "arq":
+        return r ** (1.0 + max(float(retries), 0.0))
+    if policy == "fec":
+        return r * (1.0 - (1.0 - r) ** int(group))
+    raise ValueError(f"unknown recovery policy {policy!r}")
+
+
+# -- numpy oracles (property tests) ------------------------------------------
+
+def arq_residual_mask_numpy(mask: np.ndarray, u_rec: np.ndarray,
+                            loss_rate, retries) -> np.ndarray:
+    """Oracle for ``arq_residual_mask`` (independent numpy port)."""
+    r = np.clip(np.asarray(loss_rate, np.float32), 0.0, 1.0)
+    m = max(float(retries), 0.0)
+    still = u_rec < np.power(r, m, dtype=np.float32)
+    out = np.asarray(mask, np.float32).copy()
+    out[(out < 0.5) & ~still] = 1.0
+    return out
+
+
+def fec_recover_numpy(mask: np.ndarray, parity: np.ndarray,
+                      group: int) -> np.ndarray:
+    """Oracle for the FEC group-repair prepass: group g of G packets is
+    repaired iff exactly one data packet in it was lost AND parity g
+    arrived. Plain python loops on purpose — independent of the jnp
+    reference in kernels/fec_recover/ref.py."""
+    mask = np.asarray(mask, np.float32)
+    parity = np.asarray(parity, np.float32)
+    C, P = mask.shape
+    out = mask.copy()
+    for c in range(C):
+        for g in range(parity.shape[1]):
+            lo, hi = g * group, min((g + 1) * group, P)
+            lost = np.flatnonzero(mask[c, lo:hi] < 0.5)
+            if lost.size == 1 and parity[c, g] > 0.5:
+                out[c, lo + lost[0]] = 1.0
+    return out

@@ -14,14 +14,22 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.netsim.bandwidth import init_logbw
-from repro.netsim.channel import init_channel_state
+from repro.netsim.channel import (DOWN_INIT_FOLD, init_channel_state,
+                                  stationary_bad_frac)
 from repro.netsim.config import NetSimConfig
 
 
 class NetSimState(NamedTuple):
     channel: jnp.ndarray  # (N,) int32 GE states (0=GOOD, 1=BAD), or (0,)
     logbw: jnp.ndarray    # (N,) f32 log upload Mbps levels, or (0,)
+    # downlink GE channel states — a SECOND independent chain per
+    # client (broadcast fades independently of the uplink). (0,) unless
+    # down_channel == "gilbert_elliott". Defaulted so the frozen legacy
+    # steps' positional NetSimState(channel, logbw) stays valid.
+    down: jnp.ndarray = jnp.zeros((0,), jnp.int32)
 
 
 def good_state_scores(net: NetSimState) -> jnp.ndarray:
@@ -45,6 +53,7 @@ def init_net_state(ns: NetSimConfig, n_clients: int, *, base_key=None,
     """
     channel = jnp.zeros((0,), jnp.int32)
     logbw = jnp.zeros((0,), jnp.float32)
+    down = jnp.zeros((0,), jnp.int32)
     if ns.channel == "gilbert_elliott":
         if base_key is None:
             raise ValueError("gilbert_elliott channel needs base_key")
@@ -58,4 +67,14 @@ def init_net_state(ns: NetSimConfig, n_clients: int, *, base_key=None,
                 "upload speeds (pass nets.upload_mbps through the "
                 "engine)")
         logbw = init_logbw(upload_mbps)
-    return NetSimState(channel=channel, logbw=logbw)
+    if ns.down_channel == "gilbert_elliott":
+        if base_key is None:
+            raise ValueError("gilbert_elliott downlink needs base_key")
+        # stationary draw at the scenario's nominal downlink rate, off
+        # a distinguished fold — an independent chain from the uplink's
+        pi_b = stationary_bad_frac(jnp.float32(ns.down_loss),
+                                   ns.good_loss, ns.bad_loss)
+        u = jax.random.uniform(
+            jax.random.fold_in(base_key, DOWN_INIT_FOLD), (n_clients,))
+        down = (u < pi_b).astype(jnp.int32)
+    return NetSimState(channel=channel, logbw=logbw, down=down)

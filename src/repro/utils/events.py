@@ -95,6 +95,12 @@ class RoundRecord:
     buf_fill: Optional[float] = None         # live buffer-slot fraction
     # robustness
     quar_frac: Optional[float] = None        # quarantined pkt fraction
+    # full-duplex / recovery (PR-10)
+    downlink_loss: Optional[float] = None    # realized broadcast drop
+    fec_recovered: Optional[float] = None    # pkt fraction FEC repaired
+    arq_recovered: Optional[float] = None    # pkt fraction ARQ redrew
+    budget_escalations: Optional[float] = None  # controller escalations
+    rec_level_mean: Optional[float] = None   # mean policy ladder level
     # update magnitudes
     update_norm: Optional[float] = None      # |params_t+1 - params_t|
     ef_norm: Optional[float] = None          # |EF rows| after update

@@ -1,0 +1,392 @@
+"""Frozen copy of the PRE-full-duplex round step (engine.py as of PR 9).
+
+This is the bit-identity oracle for the ``recovery="one_shot"`` +
+``down_channel="off"`` defaults: the full-duplex PR threads downlink
+packetisation, the stale-model buffer, the recovery-policy family and
+the loss-budget controller through the engine, and
+tests/test_recovery.py asserts that with the default config the
+refactored step still computes EXACTLY this math, bitwise, for every
+algorithm combination — including the netsim, EF, async, faults and
+telemetry paths the new subsystems ride on. Deliberately verbatim (only
+``EngineState(...)`` construction swapped for ``state._replace(...)``
+so the frozen step tolerates fields added to the carry later) — do not
+"clean up" or share code with the live engine; divergence is the point
+of the lock.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import async_agg as async_mod
+from repro.core import client_updates as cu
+from repro.core import selection as sel_mod
+from repro.core import telemetry as tele_mod
+from repro.core.mlp import mlp_weighted_loss
+from repro.core.tra import flatten_clients, unflatten_like
+from repro.kernels.common import DENOM_EPS
+from repro.kernels.netsim_mask import ops as netsim_ops
+from repro.kernels.robust_agg import ops as robust_ops
+from repro.kernels.uplink_fused import ops as uplink_ops
+from repro.netsim import faults as faults_mod
+from repro.netsim.bandwidth import logbw_round_step
+from repro.netsim.channel import ge_transition_probs
+from repro.netsim.delivery import (MAX_LATENESS, arrival_lateness,
+                                   deadline_delivered, grace_staleness,
+                                   round_upload_seconds)
+from repro.netsim.state import NetSimState
+from repro.network.packets import n_packets
+
+
+def make_legacy_v9_round_step(cfg, cohort: int):
+    """The pre-full-duplex ``step(ctx, state, t)``: the full PR-9 round
+    (netsim, selection, async, faults, robust defenses, telemetry) with
+    a lossless downlink and the single one-shot TRA uplink recovery."""
+    tra_cfg = cfg.tra
+    hyper = cfg.hyper()
+    algo = cfg.algo
+    ef = cfg.error_feedback
+    C = cohort
+    steps, bs = cfg.local_steps, cfg.batch_size
+    F = tra_cfg.packet_floats
+    debias = tra_cfg.debias
+    local = None if algo == "scaffold" else cu.LOCAL_FNS[algo]
+    ns = cfg.netsim
+    use_ge = ns.channel == "gilbert_elliott"
+    use_bw = ns.bw_ar1
+    use_dl = ns.deadline
+    sel = cfg.sel
+    traced_sel = sel.traced
+    policy = sel.policy
+    need_gnorm = traced_sel or policy == "gradient_norm"
+    need_loss = traced_sel or policy == "loss_aware"
+    need_stale = traced_sel or policy == "staleness_aware"
+    srv_cfg = cfg.srv
+    traced_srv = srv_cfg.traced
+    srv_mode = srv_cfg.mode
+    use_buf = traced_srv or srv_mode == "async"
+    nonsync = traced_srv or srv_mode != "sync"
+    flt_cfg = cfg.faults
+    dfn_cfg = cfg.defense
+    use_faults = flt_cfg.enabled
+    trim_k = dfn_cfg.trim_k
+    need_rep = use_faults and (traced_sel
+                               or policy == "reputation_aware")
+    tele_cfg = cfg.telemetry
+    tele_on = tele_cfg.level != "off"
+
+    def step(ctx, state, t):
+        dd = ctx.data
+        N = dd.counts.shape[0]
+        afl_len = min(64, dd.train_x.shape[1])
+        params = state.params
+        old_vec, _ = ravel_pytree(params)
+        D_model = old_vec.shape[0]
+        D_up = 2 * D_model if algo == "scaffold" else D_model
+        P = n_packets(D_up, F)
+        n_batch = C * steps * bs
+        n_tra = 2 * C * P if use_ge else C * P
+        key = jax.random.fold_in(ctx.base_key, t)
+        u_all = jax.random.uniform(key, (N + n_batch + n_tra,),
+                                   minval=1e-12, maxval=1.0)
+        u_sel = u_all[:N]
+        u_idx = u_all[N:N + n_batch].reshape(C, steps, bs)
+        u_tra = u_all[N + n_batch:N + n_batch + C * P].reshape(C, P)
+        u_emit = u_all[N + n_batch + C * P:].reshape(C, P) \
+            if use_ge else None
+
+        sel_bw = state.net.logbw if use_bw else ctx.sel_logbw
+        if traced_sel:
+            logits = sel_mod.traced_policy_logits(
+                ctx.sel_policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel, stale_mem=state.stale_mem,
+                rep_mem=state.rep_mem, n_clients=N)
+        else:
+            logits = sel_mod.policy_logits(
+                policy, temperature=ctx.sel_temp,
+                explore=ctx.sel_explore,
+                threshold_mbps=ctx.sel_threshold, logbw=sel_bw,
+                gnorm_mem=state.gnorm_mem, loss_mem=state.loss_mem,
+                channel=state.net.channel, stale_mem=state.stale_mem,
+                rep_mem=state.rep_mem)
+        ids = sel_mod.select_from_uniforms(u_sel, logits, ctx.eligible,
+                                           C)
+        counts = dd.counts[ids]                              # (C,)
+        idx = jnp.minimum((u_idx * counts[:, None, None]
+                           ).astype(jnp.int32), counts[:, None, None] - 1)
+        cid = ids[:, None, None]
+        X = dd.train_x[cid, idx]                 # (C, steps, bs, d)
+        Y = dd.train_y[cid, idx]                 # (C, steps, bs)
+        w = counts.astype(jnp.float32)
+        weights = w / w.sum()
+        suff = ctx.sufficient[ids]
+
+        if algo == "scaffold":
+            c_global = unflatten_like(state.c_global, params)
+
+            def loc(p, x, y, ci_vec):
+                ci = unflatten_like(ci_vec, params)
+                return cu.scaffold_local(p, x, y, c_global, ci, hyper)
+
+            uploads, aux = jax.vmap(loc, in_axes=(None, 0, 0, 0))(
+                params, X, Y, state.c_i[ids])
+            dw = flatten_clients(uploads["dw"], C)
+            dc = flatten_clients(uploads["dc"], C)
+            flat = jnp.concatenate([dw, dc], axis=1)         # (C, 2D)
+        else:
+            uploads, aux = jax.vmap(
+                lambda p, x, y: local(p, x, y, hyper),
+                in_axes=(None, 0, 0))(params, X, Y)
+            flat = flatten_clients(uploads, C)               # (C, D)
+
+        flat_clean = flat
+        if use_faults:
+            fkey = jax.random.fold_in(key, faults_mod.FAULT_FOLD)
+            flat = faults_mod.inject_client_faults(
+                fkey, flat, state.echo_mem[ids],
+                fail_rate=ctx.f_fail, flip_rate=ctx.f_flip,
+                echo_rate=ctx.f_echo)
+
+        pad = P * F - D_up
+        xp = jnp.pad(flat, ((0, 0), (0, pad))).reshape(C, P, F)
+        lr_c = ctx.loss_rate if ctx.loss_rate.ndim == 0 \
+            else ctx.loss_rate[ids]
+        lr_col = lr_c if lr_c.ndim == 0 else lr_c[:, None]
+        net_channel, net_logbw = state.net.channel, state.net.logbw
+        if use_ge:
+            p_gb, p_bg = ge_transition_probs(
+                lr_c, ctx.burst_len, ctx.good_loss, ctx.bad_loss)
+            ge_mask, s_fin = netsim_ops.ge_packet_mask(
+                u_tra, u_emit, net_channel[ids], p_gb, p_bg,
+                ctx.good_loss, ctx.bad_loss)
+            net_channel = net_channel.at[ids].set(s_fin)
+            pkt_mask = jnp.where(suff.astype(bool)[:, None], 1.0,
+                                 ge_mask)
+        elif tra_cfg.enabled:
+            lost = (u_tra < lr_col) \
+                & ~suff.astype(bool)[:, None]
+            pkt_mask = 1.0 - lost.astype(jnp.float32)
+        else:
+            pkt_mask = jnp.ones((C, P))
+
+        if use_bw:
+            net_logbw = logbw_round_step(key, net_logbw, ctx.bw_rho)
+        loss_mask = pkt_mask
+        a_c = None
+        arrival = None
+        lateness = None
+        if use_dl:
+            retransmit = suff.astype(bool) if tra_cfg.enabled \
+                else jnp.ones((C,), bool)
+            secs = round_upload_seconds(P, F, jnp.exp(net_logbw[ids]),
+                                        lr_c, retransmit)
+            delivered = deadline_delivered(secs, ctx.deadline_s)
+            if need_stale or nonsync or tele_on:
+                lateness = arrival_lateness(secs, ctx.deadline_s)
+            if not nonsync:
+                pkt_mask = pkt_mask * delivered[:, None]
+                arrival = delivered
+            else:
+                ontime = delivered
+                late = 1.0 - ontime
+                within = jnp.where(
+                    ctx.deadline_s > 0.0,
+                    deadline_delivered(secs,
+                                       ctx.deadline_s + ctx.grace_s),
+                    0.0)
+                a_semi = ontime + late * within * \
+                    async_mod.staleness_weight(
+                        grace_staleness(secs, ctx.deadline_s),
+                        ctx.stale_alpha)
+                feasible = (lateness < MAX_LATENESS).astype(jnp.float32)
+                w_late = async_mod.staleness_weight(lateness,
+                                                    ctx.stale_alpha)
+                a_async_log = ontime + late * feasible * w_late
+                if traced_srv:
+                    is_sync = ctx.srv_mode[0] > 0.5
+                    is_semi = ctx.srv_mode[1] > 0.5
+                    is_async = ctx.srv_mode[2] > 0.5
+                    pkt_mask = jnp.where(
+                        is_sync, loss_mask * delivered[:, None],
+                        jnp.where(is_semi,
+                                  loss_mask * within[:, None],
+                                  loss_mask))
+                    a_c = jnp.where(
+                        is_sync, jnp.ones((C,), jnp.float32),
+                        jnp.where(is_semi, a_semi, ontime))
+                    arrival = jnp.where(
+                        is_sync, delivered,
+                        jnp.where(is_semi, a_semi, a_async_log))
+                elif srv_mode == "semi_sync":
+                    pkt_mask = loss_mask * within[:, None]
+                    a_c = a_semi
+                    arrival = a_semi
+                else:  # async
+                    a_c = ontime
+                    arrival = a_async_log
+
+        if use_faults:
+            xp = faults_mod.inject_packet_faults(
+                fkey, xp, pkt_mask, corrupt_rate=ctx.f_corrupt,
+                corrupt_scale=ctx.f_cscale,
+                bitflip_rate=ctx.f_bitflip)
+
+        kept = None
+        if debias == "per_client_rate" and not use_faults:
+            pcnt = jnp.full((P,), F, jnp.float32).at[-1].set(F - pad)
+            kept = (pkt_mask @ pcnt) / D_up
+
+        if algo == "qfedavg":
+            eps = 1e-10
+            fq = jnp.power(aux["loss0"] + eps, cfg.q)
+            w_agg, mult, want_ssq = jnp.ones(C), fq, True
+        elif algo == "afl":
+            w_agg, mult, want_ssq = state.lam[ids], None, False
+        else:
+            w_agg, mult, want_ssq = weights, None, False
+        want_ssq = want_ssq or need_gnorm
+        w_up = w_agg if a_c is None else w_agg * a_c
+
+        if use_faults:
+            rob = robust_ops.robust_uplink_round(
+                xp, pkt_mask, w_up, mode=debias, d_up=D_up,
+                screen=ctx.d_screen, clip_norm=ctx.d_clip,
+                trim_gate=ctx.d_trim, trim_k=trim_k,
+                ef_rows=state.ef_mem[ids] if ef else None,
+                sufficient=suff, loss_rate=lr_c, mult=mult,
+                want_ssq=want_ssq)
+            agg, new_ef_rows, ssq = rob.agg, rob.ef_rows, rob.ssq
+            kept = rob.kept
+        else:
+            rob = None
+            agg, new_ef_rows, ssq = uplink_ops.uplink_round(
+                xp, pkt_mask, w_up, mode=debias, d_up=D_up,
+                ef_rows=state.ef_mem[ids] if ef else None, kept=kept,
+                sufficient=suff, loss_rate=lr_c, mult=mult,
+                want_ssq=want_ssq)
+        new_ef = state.ef_mem.at[ids].set(new_ef_rows) if ef \
+            else state.ef_mem
+
+        new_buf = state.buf
+        den_ready = None
+        if use_buf:
+            t_f = t.astype(jnp.float32)
+            num_ready, den_ready, popped = async_mod.buffer_pop_ready(
+                state.buf, t_f, ctx.stale_alpha)
+            den_on = w_up.sum()
+            num_on = agg * jnp.maximum(den_on, DENOM_EPS)
+            agg_buf = (num_on + num_ready) \
+                / jnp.maximum(den_on + den_ready, DENOM_EPS)
+            use_ready = den_ready > 0.0
+            if traced_srv:
+                use_ready = use_ready & is_async
+            agg = jnp.where(use_ready, agg_buf, agg)
+            q_full = uplink_ops.debias_client_scale(
+                w_agg, mode=debias, kept=kept, sufficient=suff,
+                loss_rate=lr_c, mult=mult)
+            coord_mask = jnp.repeat(loss_mask, F, axis=1)[:, :D_up]
+            base_rows = flat + state.ef_mem[ids] if ef else flat
+            if use_faults:
+                scr_on = ctx.d_screen > 0.5
+                q_full = q_full * rob.s_clip
+                base_rows = jnp.where(
+                    scr_on & ~jnp.isfinite(base_rows), 0.0, base_rows)
+            contrib = base_rows * coord_mask * q_full[:, None]
+            cand_live = (lateness > 0.0) & (lateness < MAX_LATENESS)
+            if use_faults:
+                cand_live = cand_live & ~(scr_on & (rob.qcnt > 0.0))
+            if traced_srv:
+                cand_live = cand_live & is_async
+            new_buf = async_mod.buffer_insert(
+                popped, contrib, t_f + lateness, w_agg, lateness,
+                cand_live)
+
+        c_global_new, c_i_new, lam_new = \
+            state.c_global, state.c_i, state.lam
+        if algo == "scaffold":
+            D = dw.shape[1]
+            dw_agg, dc_agg = agg[:D], agg[D:]
+            new_vec = old_vec + dw_agg
+            c_global_new = state.c_global + (C / N) * dc_agg
+            c_i_new = state.c_i.at[ids].set(state.c_i[ids] + dc)
+        elif algo == "qfedavg":
+            h = cfg.q * jnp.power(aux["loss0"] + eps, cfg.q - 1) \
+                * ssq + cfg.lipschitz * fq
+            agg_sum = agg * C
+            new_vec = old_vec - agg_sum / jnp.maximum(h.sum(), 1e-8)
+        elif algo == "afl":
+            new_vec = agg
+        elif algo == "pfedme":
+            new_vec = (1 - cfg.pfedme_beta) * old_vec \
+                + cfg.pfedme_beta * agg
+        else:  # fedavg / perfedavg: weighted mean of uploaded models
+            new_vec = agg
+        if nonsync:
+            den_tot = w_up.sum() if den_ready is None \
+                else w_up.sum() + den_ready
+            has_arrivals = den_tot > 0.0
+            if traced_srv:
+                has_arrivals = has_arrivals | is_sync
+            new_vec = jnp.where(has_arrivals, new_vec, old_vec)
+        new_params = unflatten_like(new_vec, params)
+
+        if algo == "afl":
+            Xe = dd.train_x[ids, :afl_len]
+            Ye = dd.train_y[ids, :afl_len]
+            msk = (jnp.arange(afl_len)[None, :]
+                   < counts[:, None]).astype(jnp.float32)
+            losses = jax.vmap(mlp_weighted_loss,
+                              in_axes=(None, 0, 0, 0))(
+                new_params, Xe, Ye, msk)
+            lam = state.lam.at[ids].add(cfg.afl_lr_lambda * losses)
+            lam = jnp.maximum(lam, 0.0)
+            lam_new = lam / lam.sum()
+
+        gnorm_new = state.gnorm_mem.at[ids].set(ssq) if need_gnorm \
+            else state.gnorm_mem
+        loss_new = state.loss_mem.at[ids].set(aux["loss0"]) \
+            if need_loss else state.loss_mem
+        stale_new = state.stale_mem.at[ids].set(lateness) \
+            if need_stale and use_dl else state.stale_mem
+        echo_new = state.echo_mem.at[ids].set(flat_clean) \
+            if use_faults else state.echo_mem
+        rep_new = state.rep_mem.at[ids].add(rob.qcnt / P) \
+            if need_rep else state.rep_mem
+
+        logs = {"loss": aux["loss0"].mean(), "ids": ids}
+        if use_faults:
+            logs["quarantine"] = rob.qcnt
+        if use_dl:
+            logs["arrival"] = arrival
+        new_tele = state.tele
+        if tele_on:
+            tele_scale = uplink_ops.debias_client_scale(
+                w_agg, mode=debias, kept=kept, sufficient=suff,
+                loss_rate=lr_c, mult=mult)
+            tlogs, new_tele = tele_mod.round_telemetry(
+                tele_cfg, state.tele, ids=ids, n_clients=N,
+                pkt_mask=pkt_mask, loss_mask=loss_mask,
+                old_vec=old_vec, new_vec=new_vec, scale=tele_scale,
+                logbw=ctx.sel_logbw
+                if ctx.sel_logbw.shape[0] == N else None,
+                ef_new_rows=new_ef_rows if ef else None,
+                arrival=arrival if use_dl else None,
+                lateness=lateness if use_dl else None,
+                qcnt=rob.qcnt if use_faults else None,
+                buf_due=new_buf.due if use_buf else None,
+                buf_empty_due=async_mod.EMPTY_DUE)
+            logs.update(tlogs)
+        new_state = state._replace(
+            params=new_params, ef_mem=new_ef, c_global=c_global_new,
+            c_i=c_i_new, lam=lam_new,
+            net=NetSimState(net_channel, net_logbw),
+            gnorm_mem=gnorm_new, loss_mem=loss_new,
+            stale_mem=stale_new, buf=new_buf, echo_mem=echo_new,
+            rep_mem=rep_new, tele=new_tele)
+        return new_state, logs
+
+    return step

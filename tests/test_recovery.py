@@ -1,0 +1,532 @@
+"""Full-duplex loss tolerance (ISSUE 10).
+
+* Bit-identity lock: the defaults — ``recovery="one_shot"`` untraced,
+  ``down_channel="off"``, controller disabled — compute EXACTLY the
+  frozen PR-9 round step (tests/_legacy_engine_v9.py) for
+  fedavg/scaffold/qfedavg, ±TRA, ±error feedback, with netsim/faults
+  paths on. The retransmit-sends hoist into netsim/recovery.py is
+  locked bitwise separately.
+* Headline robustness: R=30 rounds at 30% Gilbert–Elliott DOWNLINK
+  loss — the stale-parameter fallback stays within tolerance of the
+  lossless-downlink run on global AND bottom-quartile eval loss, while
+  the zero-fill baseline diverges (deterministic seeds).
+* One-program grid: a traced recovery-policy × loss-rate grid compiles
+  to ONE vmap(scan) program and EVERY cell is bitwise equal to its
+  static single-engine run (same traced family, same uniform totals).
+* Recovery math: hypothesis property tests of the FEC group-repair
+  prepass and the ARQ residual mask against independent numpy oracles;
+  the Pallas FEC kernel (interpret mode) against the jnp reference;
+  closed-form sends/residual-rate sanity.
+* Adaptive loss-budget controller: escalates one_shot → fec → arq when
+  realized loss exceeds the budget, de-escalates with hysteresis when
+  the channel recovers, and surfaces escalation telemetry.
+* Checkpoint: the stale-model buffer and the controller carries ride
+  ``EngineState`` through save/load bit-identically, and a resumed run
+  continues bit-for-bit.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.engine import RoundScanEngine, validate_round_config
+from repro.core.lossbudget import (LossBudgetConfig,
+                                   controller_policy_onehot,
+                                   controller_update)
+from repro.core.mlp import mlp_init, mlp_weighted_loss
+from repro.core.selection import SelectionConfig
+from repro.core.server import FederatedServer, FLConfig
+from repro.core.sweep import SweepEngine
+from repro.core.tra import TRAConfig
+from repro.data.synthetic import generate_synthetic, padded_eval_set
+from repro.kernels.fec_recover import ops as fec_ops
+from repro.kernels.fec_recover.fec_recover import fec_recover_call
+from repro.kernels.fec_recover.ref import fec_recover_ref
+from repro.netsim import recovery as rec_mod
+from repro.netsim import (DefenseConfig, FaultConfig, NetSimConfig,
+                          RecoveryConfig)
+from repro.netsim.delivery import (INFEASIBLE_SECS,
+                                   round_upload_seconds)
+from repro.core.telemetry import TelemetryConfig
+from repro.network.trace import eligible_mask_device
+from tests._hyp import given, settings, st
+from tests._legacy_engine_v9 import make_legacy_v9_round_step
+
+N_CLIENTS = 20
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate_synthetic(np.random.default_rng(0),
+                              n_clients=N_CLIENTS, alpha=0.5, beta=0.5)
+
+
+@pytest.fixture(scope="module")
+def nets():
+    from repro.network.trace import ClientNetworks
+    return ClientNetworks(np.linspace(0.5, 20.0, N_CLIENTS),
+                          np.full(N_CLIENTS, 0.05))
+
+
+def _cfg(*, algo="fedavg", tra_on=True, ef=False, rounds=4, cpr=8,
+         seed=0, faults_on=False, netsim=None, recovery=None,
+         lossbudget=None, level="off", eval_every=10 ** 6):
+    faults = (FaultConfig(enabled=True, corrupt_rate=0.1,
+                          corrupt_scale=0.5)
+              if faults_on else FaultConfig())
+    defense = (DefenseConfig(screen=True, clip=True, clip_norm=20.0)
+               if faults_on else DefenseConfig())
+    if netsim is None:
+        netsim = NetSimConfig(
+            channel="gilbert_elliott" if tra_on else "iid",
+            burst_len=8.0, deadline=tra_on, deadline_s=60.0)
+    kw = {}
+    if recovery is not None:
+        kw["recovery"] = recovery
+    if lossbudget is not None:
+        kw["lossbudget"] = lossbudget
+    return FLConfig(
+        algo=algo, n_rounds=rounds, clients_per_round=cpr,
+        local_steps=2, batch_size=8, lr=0.1, eval_every=eval_every,
+        seed=seed, error_feedback=ef,
+        sel=SelectionConfig(),
+        tra=TRAConfig(enabled=tra_on, loss_rate=0.3),
+        netsim=netsim, faults=faults, defense=defense,
+        telemetry=TelemetryConfig(level=level), **kw)
+
+
+def _vec(params):
+    return np.asarray(ravel_pytree(params)[0])
+
+
+def _engine(cfg, data, *, n_clients=N_CLIENTS, seed=None):
+    """Direct engine construction matching FederatedServer's inputs."""
+    from repro.core import tra as tra_mod
+    from repro.network.trace import sample_networks
+    nets = sample_networks(
+        np.random.default_rng(cfg.seed if seed is None else seed),
+        n_clients)
+    suff = tra_mod.sufficiency_report(nets, cfg.tra.threshold_mbps)
+    elig = np.asarray(eligible_mask_device(
+        jnp.asarray(nets.upload_mbps), cfg.selection,
+        eligible_ratio=cfg.eligible_ratio,
+        threshold_mbps=cfg.tra.threshold_mbps))
+    return RoundScanEngine(cfg, data, suff, elig,
+                           upload_mbps=nets.upload_mbps,
+                           packet_loss=nets.packet_loss)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity locks against the frozen PR-9 step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["fedavg", "scaffold", "qfedavg"])
+@pytest.mark.parametrize("tra_on,ef,faults_on",
+                         [(False, False, False), (True, True, False),
+                          (True, False, True)])
+def test_defaults_bit_identical_to_legacy_v9(algo, tra_on, ef,
+                                             faults_on, data, nets):
+    """recovery="one_shot" + downlink off + controller off (all
+    defaults) compute exactly the frozen PR-9 step — netsim and fault
+    paths included."""
+    cfg = _cfg(algo=algo, tra_on=tra_on, ef=ef, faults_on=faults_on)
+    srv = FederatedServer(cfg, data, nets)
+    eng = srv.engine
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed))
+
+    state, logs = eng.run_block(eng.init_state(params0), 0,
+                                cfg.n_rounds)
+
+    legacy = jax.jit(make_legacy_v9_round_step(cfg, eng.cohort))
+    lstate = eng.init_state(params0)
+    lids, llosses = [], []
+    for t in range(cfg.n_rounds):
+        lstate, out = legacy(eng.ctx, lstate, jnp.int32(t))
+        lids.append(np.asarray(out["ids"]))
+        llosses.append(float(out["loss"]))
+
+    np.testing.assert_array_equal(logs["ids"], np.stack(lids))
+    np.testing.assert_array_equal(logs["loss"],
+                                  np.asarray(llosses, np.float32))
+    np.testing.assert_array_equal(_vec(state.params),
+                                  _vec(lstate.params))
+    np.testing.assert_array_equal(np.asarray(state.ef_mem),
+                                  np.asarray(lstate.ef_mem))
+    # the new carries stay compiled out at the defaults
+    assert state.stale_model.shape == (0,)
+    assert state.bud_level.shape == (0,)
+    assert state.bud_loss.shape == (0,)
+
+
+def test_retransmit_sends_hoist_is_bitwise():
+    """The P/(1-r) expected-sends formula hoisted into
+    netsim/recovery.py matches the pre-hoist delivery expression
+    bit-for-bit, including the RATE_EPS saturation at r -> 1."""
+    from repro.kernels.common import RATE_EPS
+    rates = jnp.asarray([0.0, 0.05, 0.3, 0.9, 0.999999, 1.0, 1.5],
+                        jnp.float32)
+    legacy = 1.0 / jnp.maximum(1.0 - jnp.clip(rates, 0.0, 1.0),
+                               RATE_EPS)
+    np.testing.assert_array_equal(
+        np.asarray(rec_mod.retransmit_sends(rates)),
+        np.asarray(legacy))
+    # and through round_upload_seconds (the caller that hoisted it)
+    mbps = jnp.asarray([2.0, 0.0, 5.0, np.inf, 1.0, 3.0, 4.0],
+                       jnp.float32)
+    secs = round_upload_seconds(10, 256, mbps, rates,
+                                jnp.ones((7,), bool))
+    assert np.isfinite(np.asarray(secs)).all()
+    inf_f32 = float(np.float32(INFEASIBLE_SECS))
+    assert float(secs[1]) == inf_f32  # zero bandwidth
+    assert float(secs[3]) == inf_f32  # inf bandwidth
+
+
+# ---------------------------------------------------------------------------
+# recovery math: oracles + property tests
+# ---------------------------------------------------------------------------
+def test_fec_ref_matches_numpy_oracle():
+    rng = np.random.default_rng(1)
+    for C, P, G in [(6, 13, 4), (4, 32, 8), (3, 5, 8), (5, 16, 2)]:
+        gn = rec_mod.fec_groups(P, G)
+        mask = (rng.random((C, P)) > 0.4).astype(np.float32)
+        par = (rng.random((C, gn)) > 0.3).astype(np.float32)
+        out = fec_recover_ref(jnp.asarray(mask), jnp.asarray(par), G)
+        np.testing.assert_array_equal(
+            np.asarray(out), rec_mod.fec_recover_numpy(mask, par, G))
+
+
+def test_fec_kernel_interpret_matches_ref():
+    """The Pallas kernel (interpret mode, runs anywhere) is bitwise the
+    jnp reference — the cross-backend parity tools/kernel_parity_smoke
+    re-checks compiled on TPU."""
+    rng = np.random.default_rng(2)
+    C, P, G = 8, 21, 4
+    gn = rec_mod.fec_groups(P, G)
+    pad = gn * G - P
+    mask = (rng.random((C, P)) > 0.4).astype(np.float32)
+    par = (rng.random((C, gn)) > 0.3).astype(np.float32)
+    mpad = jnp.pad(jnp.asarray(mask), ((0, 0), (0, pad)),
+                   constant_values=1.0)
+    out_k = fec_recover_call(mpad, jnp.asarray(par), group=G,
+                             block_c=4, interpret=True)[:, :P]
+    out_r = fec_recover_ref(jnp.asarray(mask), jnp.asarray(par), G)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_fec_recovers_any_single_loss_per_group():
+    """Exactly one loss in a group + delivered parity => fully
+    repaired; two losses => untouched."""
+    G = 4
+    mask = np.ones((2, 8), np.float32)
+    mask[0, 2] = 0.0              # single loss in group 0
+    mask[1, 4] = mask[1, 5] = 0.0  # double loss in group 1
+    par = np.ones((2, 2), np.float32)
+    out = np.asarray(fec_ops.fec_recover(
+        jnp.asarray(mask), jnp.asarray(par), group=G, impl="ref"))
+    assert out[0].sum() == 8.0            # repaired
+    assert out[1].sum() == 6.0            # not repairable
+    # lost parity => no repair even for a single loss
+    par[0, 0] = 0.0
+    out = np.asarray(fec_ops.fec_recover(
+        jnp.asarray(mask), jnp.asarray(par), group=G, impl="ref"))
+    assert out[0, 2] == 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 40), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_fec_prepass_property(C, P, G, seed):
+    pytest.importorskip("hypothesis")
+    rng = np.random.default_rng(seed)
+    gn = rec_mod.fec_groups(P, G)
+    mask = (rng.random((C, P)) > 0.5).astype(np.float32)
+    par = (rng.random((C, gn)) > 0.5).astype(np.float32)
+    out = np.asarray(fec_ops.fec_recover(
+        jnp.asarray(mask), jnp.asarray(par), group=G, impl="ref"))
+    oracle = rec_mod.fec_recover_numpy(mask, par, G)
+    np.testing.assert_array_equal(out, oracle)
+    # repair only ever ADDS delivered packets
+    assert (out >= mask).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 5.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_arq_residual_mask_property(rate, retries, seed):
+    pytest.importorskip("hypothesis")
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((4, 17)) > 0.5).astype(np.float32)
+    u = rng.random((4, 17)).astype(np.float32)
+    out = np.asarray(rec_mod.arq_residual_mask(
+        jnp.asarray(mask), jnp.asarray(u), jnp.float32(rate),
+        jnp.float32(retries)))
+    oracle = rec_mod.arq_residual_mask_numpy(mask, u, rate, retries)
+    np.testing.assert_array_equal(out, oracle)
+    assert (out >= mask).all()
+    if retries == 0.0:
+        # r^0 = 1: every lost packet stays lost — exact one_shot
+        np.testing.assert_array_equal(out, mask)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 8.0), st.floats(0.0, 2.0))
+def test_arq_sends_bounds(rate, retries, backoff):
+    pytest.importorskip("hypothesis")
+    s = float(rec_mod.arq_sends(jnp.float32(rate), jnp.float32(retries),
+                                jnp.float32(backoff)))
+    assert np.isfinite(s)
+    assert 1.0 <= s <= 1.0 + backoff * retries + 1e-4
+
+
+def test_residual_loss_rate_closed_forms():
+    assert rec_mod.residual_loss_rate("one_shot", 0.3) == \
+        pytest.approx(0.3)
+    assert rec_mod.residual_loss_rate("arq", 0.3, retries=2) == \
+        pytest.approx(0.3 ** 3)
+    assert rec_mod.residual_loss_rate("fec", 0.3, group=8) == \
+        pytest.approx(0.3 * (1 - 0.7 ** 8))
+    # recovery strictly helps at interior rates
+    for r in (0.05, 0.3, 0.6):
+        assert rec_mod.residual_loss_rate("arq", r) < r
+        assert rec_mod.residual_loss_rate("fec", r) < r
+
+
+# ---------------------------------------------------------------------------
+# static-config validation
+# ---------------------------------------------------------------------------
+def test_recovery_requires_tra(data):
+    cfg = _cfg(tra_on=False, recovery=RecoveryConfig(policy="fec"))
+    with pytest.raises(ValueError, match="tra"):
+        validate_round_config(cfg)
+
+
+def test_controller_requires_traced_recovery(data):
+    cfg = _cfg(lossbudget=LossBudgetConfig(enabled=True))
+    with pytest.raises(ValueError, match="traced"):
+        validate_round_config(cfg)
+
+
+def test_recovery_pressure_requires_controller(data):
+    cfg = dataclasses.replace(
+        _cfg(), sel=SelectionConfig(policy="recovery_pressure"))
+    with pytest.raises(ValueError, match="recovery_pressure"):
+        validate_round_config(cfg)
+
+
+def test_sweep_rejects_mixed_static_recovery(data):
+    cfgs = [_cfg(recovery=RecoveryConfig(traced=True, group=g))
+            for g in (4, 8)]
+    with pytest.raises(ValueError):
+        SweepEngine.from_configs(cfgs, data)
+
+
+# ---------------------------------------------------------------------------
+# headline: stale-parameter fallback under 30% GE downlink loss
+# ---------------------------------------------------------------------------
+def _eval_losses(data, params):
+    X, Y, W = map(jnp.asarray, padded_eval_set(data))
+    return np.asarray(jax.vmap(mlp_weighted_loss,
+                               in_axes=(None, 0, 0, 0))(params, X, Y,
+                                                        W))
+
+
+def _headline_run(data, ns):
+    cfg = FLConfig(n_rounds=30, clients_per_round=10, seed=0,
+                   netsim=ns, tra=TRAConfig(enabled=True,
+                                            loss_rate=0.05))
+    eng = _engine(cfg, data)
+    st, _ = eng.run_block(eng.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 30)
+    losses = _eval_losses(data, st.params)
+    k = max(1, losses.size // 4)
+    return float(losses.mean()), float(np.sort(losses)[-k:].mean())
+
+
+def test_headline_stale_fallback_tolerates_downlink_loss(data):
+    """R=30 deterministic rounds at 30% Gilbert–Elliott DOWNLINK loss:
+    the stale-parameter fallback stays within tolerance of the
+    lossless-downlink run on global AND bottom-quartile eval loss; the
+    zero-fill baseline diverges."""
+    lossless = _headline_run(data, NetSimConfig())
+    stale = _headline_run(data, NetSimConfig(
+        down_channel="gilbert_elliott", down_fallback="stale",
+        down_loss=0.3))
+    zero = _headline_run(data, NetSimConfig(
+        down_channel="gilbert_elliott", down_fallback="zero",
+        down_loss=0.3))
+    # global eval loss
+    assert stale[0] <= 1.35 * lossless[0], (stale, lossless)
+    assert zero[0] >= 2.5 * lossless[0], (zero, lossless)
+    # bottom-quartile (worst 25% of clients) eval loss
+    assert stale[1] <= 1.25 * lossless[1], (stale, lossless)
+    assert zero[1] >= 1.4 * lossless[1], (zero, lossless)
+
+
+# ---------------------------------------------------------------------------
+# one-program recovery grid, every cell bitwise vs its static run
+# ---------------------------------------------------------------------------
+def test_recovery_grid_one_program_cells_bitwise(data):
+    """3-policy × 2-loss-rate traced grid: ONE compiled program, every
+    cell bit-identical to a static single-engine run of the same
+    traced-family config."""
+    R = 3
+    cfgs = [_cfg(rounds=R,
+                 recovery=RecoveryConfig(traced=True, policy=p))
+            for p in rec_mod.RECOVERY_POLICIES for lr in (0.1, 0.3)]
+    cfgs = [dataclasses.replace(
+        c, tra=TRAConfig(enabled=True, loss_rate=lr))
+        for c, (p, lr) in zip(cfgs, [(p, lr)
+                                     for p in rec_mod.RECOVERY_POLICIES
+                                     for lr in (0.1, 0.3)])]
+    sw = SweepEngine.from_configs(cfgs, data)
+    states, logs = sw.run(R)
+    assert sw._block._cache_size() in (1, -1)
+    assert logs["loss"].shape == (len(cfgs), R)
+
+    for i, cfg in enumerate(cfgs):
+        eng = _engine(cfg, data)
+        st, l = eng.run_block(eng.init_state(
+            mlp_init(jax.random.PRNGKey(cfg.seed))), 0, R)
+        cell = jax.tree.map(lambda x: np.asarray(x)[i], states.params)
+        np.testing.assert_array_equal(_vec(st.params), _vec(cell))
+        np.testing.assert_array_equal(logs["loss"][i],
+                                      np.asarray(l["loss"]))
+
+
+def test_untraced_policies_change_training(data):
+    """fec/arq actually change the masks (not silently inert): at a
+    lossy channel the three untraced policies produce three distinct
+    trajectories."""
+    R = 3
+    outs = []
+    for p in rec_mod.RECOVERY_POLICIES:
+        cfg = _cfg(rounds=R, recovery=RecoveryConfig(policy=p))
+        eng = _engine(cfg, data)
+        st, _ = eng.run_block(eng.init_state(
+            mlp_init(jax.random.PRNGKey(0))), 0, R)
+        outs.append(_vec(st.params))
+    assert not np.array_equal(outs[0], outs[1])
+    assert not np.array_equal(outs[0], outs[2])
+    assert not np.array_equal(outs[1], outs[2])
+
+
+# ---------------------------------------------------------------------------
+# adaptive loss-budget controller
+# ---------------------------------------------------------------------------
+def test_controller_unit_escalation_ladder():
+    lv = jnp.zeros((4,))
+    ema = jnp.zeros((4,))
+    ssq = jnp.ones((4,))
+    realized = jnp.asarray([0.0, 0.5, 0.5, 0.9], jnp.float32)
+    for _ in range(4):
+        lv, ema, n = controller_update(lv, ema, realized, ssq,
+                                       budget=jnp.float32(0.2),
+                                       beta=jnp.float32(0.5),
+                                       div_gate=jnp.float32(1e9))
+    out = np.asarray(lv)
+    assert out[0] == 0.0                      # under budget: stays
+    assert (out[1:] == 2.0).all()             # over budget: tops out
+    oh = np.asarray(controller_policy_onehot(lv))
+    np.testing.assert_array_equal(oh[0], [1, 0, 0])
+    np.testing.assert_array_equal(oh[3], [0, 0, 1])
+    # hysteresis: a recovered channel de-escalates one level per round
+    lv2, _, _ = controller_update(lv, jnp.zeros((4,)),
+                                  jnp.zeros((4,)), ssq,
+                                  budget=jnp.float32(0.2),
+                                  beta=jnp.float32(1.0),
+                                  div_gate=jnp.float32(1e9))
+    assert (np.asarray(lv2) == np.maximum(out - 1.0, 0.0)).all()
+
+
+def test_controller_escalates_in_engine(data):
+    """A lossy channel against a tight budget drives per-client levels
+    up the ladder, visible in the carry and the telemetry."""
+    cfg = _cfg(rounds=6, level="scalars",
+               recovery=RecoveryConfig(traced=True),
+               lossbudget=LossBudgetConfig(enabled=True, budget=0.05,
+                                           ema=0.5))
+    eng = _engine(cfg, data)
+    st, logs = eng.run_block(eng.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 6)
+    lv = np.asarray(st.bud_level)
+    assert lv.max() >= 1.0
+    assert np.asarray(st.bud_loss).max() > 0.05
+    assert logs["tele/budget_escalations"].sum() > 0
+    assert logs["tele/rec_level_mean"][-1] > 0.0
+
+
+def test_recovery_pressure_selection_runs(data):
+    cfg = _cfg(rounds=3,
+               recovery=RecoveryConfig(traced=True),
+               lossbudget=LossBudgetConfig(enabled=True, budget=0.05))
+    cfg = dataclasses.replace(
+        cfg, sel=SelectionConfig(policy="recovery_pressure"))
+    eng = _engine(cfg, data)
+    st, logs = eng.run_block(eng.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 3)
+    assert np.isfinite(logs["loss"]).all()
+
+
+# ---------------------------------------------------------------------------
+# downlink telemetry + checkpoint round-trip
+# ---------------------------------------------------------------------------
+def test_downlink_telemetry_keys(data):
+    cfg = _cfg(rounds=3, level="scalars",
+               netsim=NetSimConfig(down_channel="gilbert_elliott",
+                                   down_fallback="stale",
+                                   down_loss=0.3))
+    eng = _engine(cfg, data)
+    st, logs = eng.run_block(eng.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 3)
+    assert "tele/downlink_loss" in logs
+    dn = logs["tele/downlink_loss"]
+    assert (dn >= 0.0).all() and (dn <= 1.0).all()
+    assert dn.mean() > 0.1          # 30% nominal: losses realized
+    # recovery off: no recovery keys
+    assert "tele/fec_recovered" not in logs
+    # and with recovery on, the fractions appear and are sane
+    cfg2 = _cfg(rounds=3, level="scalars",
+                recovery=RecoveryConfig(traced=True, policy="fec"))
+    eng2 = _engine(cfg2, data)
+    _, logs2 = eng2.run_block(eng2.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 3)
+    assert (logs2["tele/fec_recovered"] >= 0).all()
+    assert (logs2["tele/arq_recovered"] >= 0).all()
+
+
+def test_checkpoint_roundtrips_recovery_carries(tmp_path, data):
+    """stale_model + bud_level/bud_loss ride EngineState through
+    save/load bit-identically, and the resumed run continues
+    bit-for-bit."""
+    cfg = _cfg(rounds=4,
+               netsim=NetSimConfig(down_channel="gilbert_elliott",
+                                   down_fallback="stale",
+                                   down_loss=0.3),
+               recovery=RecoveryConfig(traced=True),
+               lossbudget=LossBudgetConfig(enabled=True, budget=0.05))
+    eng = _engine(cfg, data)
+    st, _ = eng.run_block(eng.init_state(
+        mlp_init(jax.random.PRNGKey(0))), 0, 2)
+    assert st.stale_model.shape == (N_CLIENTS, _vec(st.params).size)
+
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, st, step=2)
+    like = eng.init_state(mlp_init(jax.random.PRNGKey(0)))
+    st2, step = load_checkpoint(path, like)
+    assert step == 2
+    for f in ("stale_model", "bud_level", "bud_loss"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st, f)), np.asarray(getattr(st2, f)))
+
+    # continue both and compare: the restored carry is the live carry
+    a, _ = eng.run_block(st, 2, 2)
+    b, _ = eng.run_block(st2, 2, 2)
+    np.testing.assert_array_equal(_vec(a.params), _vec(b.params))
+    np.testing.assert_array_equal(np.asarray(a.stale_model),
+                                  np.asarray(b.stale_model))
+    np.testing.assert_array_equal(np.asarray(a.bud_level),
+                                  np.asarray(b.bud_level))

@@ -162,7 +162,11 @@ def _score_inputs(rng, n=12):
                 stale_mem=jnp.asarray(rng.integers(0, 5, n)
                                       .astype(np.float32)),
                 rep_mem=jnp.asarray(rng.integers(0, 8, n)
-                                    .astype(np.float32)))
+                                    .astype(np.float32)),
+                bud_level=jnp.asarray(rng.integers(0, 3, n)
+                                      .astype(np.float32)),
+                bud_loss=jnp.asarray(rng.uniform(0, 0.5, n)
+                                     .astype(np.float32)))
 
 
 @pytest.mark.parametrize("policy", POLICIES)

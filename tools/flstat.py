@@ -91,6 +91,12 @@ def scenario_summary(recs: List[RoundRecord]) -> Dict[str, object]:
         "buf_fill": _mean([r.buf_fill for r in recs]),
         "part_quartile": _vec_mean([r.part_quartile for r in recs]),
         "stale_hist": _vec_mean([r.stale_hist for r in recs]),
+        "downlink_loss": _mean([r.downlink_loss for r in recs]),
+        "fec_recovered": _mean([r.fec_recovered for r in recs]),
+        "arq_recovered": _mean([r.arq_recovered for r in recs]),
+        "budget_escalations": _mean(
+            [r.budget_escalations for r in recs]),
+        "rec_level_mean": _mean([r.rec_level_mean for r in recs]),
     }
     return out
 
@@ -138,6 +144,20 @@ def print_summary(header, rounds: List[RoundRecord]) -> None:
             line.append(f"quarantined {sm['quar_frac']:.4f}")
         if line:
             print("  server:  " + "  ".join(line))
+        line = []
+        if sm["downlink_loss"] is not None:
+            line.append(f"downlink-loss {sm['downlink_loss']:.3f}")
+        if sm["fec_recovered"] is not None:
+            line.append(f"fec-recovered {sm['fec_recovered']:.4f}")
+        if sm["arq_recovered"] is not None:
+            line.append(f"arq-recovered {sm['arq_recovered']:.4f}")
+        if sm["budget_escalations"] is not None:
+            line.append(
+                f"escalations {sm['budget_escalations']:.2f}/round")
+        if sm["rec_level_mean"] is not None:
+            line.append(f"rec-level {sm['rec_level_mean']:.2f}")
+        if line:
+            print("  recovery: " + "  ".join(line))
         if sm["stale_hist"] is not None:
             h = sm["stale_hist"]
             print(f"  staleness histogram (rounds late, last bin "

@@ -128,6 +128,21 @@ def main() -> None:
     _check("netsim_mask/mask", mk, mr, rtol=0, atol=0)
     _check("netsim_mask/state", sk, sr, rtol=0, atol=0)
 
+    # fec_recover (group-parity mask repair, exact parity) -----------------
+    from repro.kernels.fec_recover.ops import fec_recover
+    from repro.netsim.recovery import fec_groups
+    for G in (2, 4, 8):
+        gn = fec_groups(P, G)
+        dm = jnp.asarray((rng.random((16, P)) > 0.4)
+                         .astype(np.float32))
+        pm = jnp.asarray((rng.random((16, gn)) > 0.3)
+                         .astype(np.float32))
+        _check(f"fec_recover/g{G}",
+               fec_recover(dm, pm, group=G, impl="kernel",
+                           interpret=True),
+               fec_recover(dm, pm, group=G, impl="ref"),
+               rtol=0, atol=0)
+
     print(f"kernel parity smoke passed on backend={jax.default_backend()}")
 
 

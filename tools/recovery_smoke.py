@@ -1,0 +1,150 @@
+"""CI smoke for full-duplex loss tolerance (downlink TRA + recovery
+policies + loss-budget controller).
+
+Three checks, exits non-zero on any failure:
+
+1. Bit-for-bit: a traced 3-policy (one_shot, fec, arq) recovery grid
+   through SweepEngine compiles to ONE program and each cell matches
+   the corresponding static single-policy engine run exactly (params,
+   per-round losses).
+2. Stale-parameter fallback: under 30% Gilbert-Elliott DOWNLINK loss a
+   short run with the stale-model fallback lands strictly below the
+   zero-fill naive baseline on train loss.
+3. Recovery telemetry: fec/arq runs actually repair packets
+   (tele/fec_recovered, tele/arq_recovered > 0) and a tight loss
+   budget drives the controller up the escalation ladder.
+
+Run as: PYTHONPATH=src python tools/recovery_smoke.py
+"""
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+    from jax.flatten_util import ravel_pytree
+
+    from repro.core.lossbudget import LossBudgetConfig
+    from repro.core.selection import SelectionConfig
+    from repro.core.server import FederatedServer, FLConfig
+    from repro.core.sweep import SweepEngine
+    from repro.core.telemetry import TelemetryConfig
+    from repro.core.tra import TRAConfig
+    from repro.data.synthetic import generate_synthetic
+    from repro.netsim import NetSimConfig, RecoveryConfig
+    from repro.netsim.recovery import RECOVERY_POLICIES
+    from repro.network.trace import ClientNetworks
+
+    n, rounds = 20, 3
+    data = generate_synthetic(np.random.default_rng(0), n_clients=n,
+                              alpha=0.5, beta=0.5)
+    nets = ClientNetworks(np.linspace(0.5, 20.0, n), np.full(n, 0.05))
+
+    def cfg(policy, traced, *, netsim=None, lossbudget=None,
+            level="off", loss_rate=0.3, rounds_=rounds):
+        kw = {}
+        if lossbudget is not None:
+            kw["lossbudget"] = lossbudget
+        return FLConfig(
+            algo="fedavg", n_rounds=rounds_, clients_per_round=8,
+            local_steps=2, batch_size=8, eval_every=100, seed=1,
+            sel=SelectionConfig(),
+            tra=TRAConfig(enabled=True, loss_rate=loss_rate),
+            netsim=netsim or NetSimConfig(channel="gilbert_elliott",
+                                          burst_len=8.0),
+            recovery=RecoveryConfig(policy=policy, traced=traced),
+            telemetry=TelemetryConfig(level=level), **kw)
+
+    failures = 0
+
+    # 1. one-program traced recovery grid, every cell bitwise ---------------
+    eng = SweepEngine.from_configs(
+        [cfg(p, True) for p in RECOVERY_POLICIES], data, nets)
+    states, logs = eng.run_block(eng.init_states(), 0, rounds)
+    n_compiled = eng._block._cache_size()
+    ok = n_compiled in (1, -1)
+    print(f"recovery grid compiled programs: {n_compiled} "
+          f"({'ok' if ok else 'MISMATCH'})")
+    failures += 0 if ok else 1
+
+    # static cells stay in the traced family (traced=True, one
+    # scenario): untraced one_shot compiles the legacy path with FEWER
+    # uniform draws, so cross-family bitwise identity is impossible by
+    # design (threefry is not prefix-stable in total draw count).
+    for s, policy in enumerate(RECOVERY_POLICIES):
+        srv = FederatedServer(cfg(policy, True), data, nets)
+        st = srv.engine.init_state(srv.params)
+        st, single = srv.engine.run_block(st, 0, rounds)
+        checks = {
+            "params": np.array_equal(
+                np.asarray(ravel_pytree(st.params)[0]),
+                np.asarray(ravel_pytree(jax.tree.map(
+                    lambda x: x[s], states.params))[0])),
+            "loss": np.array_equal(np.asarray(single["loss"]),
+                                   np.asarray(logs["loss"][s])),
+        }
+        for name, good in checks.items():
+            print(f"cell {policy}: {name} "
+                  f"{'bit-for-bit ok' if good else 'MISMATCH'}")
+            failures += 0 if good else 1
+
+    # 2. downlink stale fallback beats zero-fill ----------------------------
+    final = {}
+    for fb in ("stale", "zero"):
+        srv = FederatedServer(
+            FLConfig(algo="fedavg", n_rounds=8, clients_per_round=8,
+                     local_steps=2, batch_size=8, eval_every=100,
+                     seed=1, tra=TRAConfig(enabled=True,
+                                           loss_rate=0.05),
+                     netsim=NetSimConfig(
+                         down_channel="gilbert_elliott",
+                         down_fallback=fb, down_loss=0.3)),
+            data, nets)
+        st = srv.engine.init_state(srv.params)
+        _, lg = srv.engine.run_block(st, 0, 8)
+        final[fb] = float(np.asarray(lg["loss"])[-1])
+    degrade_ok = final["stale"] < final["zero"]
+    print(f"downlink 30% GE final loss: stale={final['stale']:.4f} "
+          f"zero={final['zero']:.4f} "
+          f"({'stale fallback ok' if degrade_ok else 'MISMATCH'})")
+    failures += 0 if degrade_ok else 1
+
+    # 3. recovery repairs packets + controller escalates --------------------
+    for policy, key in (("fec", "tele/fec_recovered"),
+                        ("arq", "tele/arq_recovered")):
+        srv = FederatedServer(cfg(policy, True, level="scalars"),
+                              data, nets)
+        st = srv.engine.init_state(srv.params)
+        _, lg = srv.engine.run_block(st, 0, rounds)
+        rec = float(np.asarray(lg[key]).mean())
+        ok = rec > 0.0
+        print(f"{policy}: {key} mean {rec:.4f} "
+              f"({'repairs ok' if ok else 'MISMATCH'})")
+        failures += 0 if ok else 1
+
+    srv = FederatedServer(
+        cfg("one_shot", True, level="scalars", rounds_=6,
+            lossbudget=LossBudgetConfig(enabled=True, budget=0.05,
+                                        ema=0.5)),
+        data, nets)
+    st = srv.engine.init_state(srv.params)
+    st, lg = srv.engine.run_block(st, 0, 6)
+    n_esc = float(np.asarray(lg["tele/budget_escalations"]).sum())
+    lv_max = float(np.asarray(st.bud_level).max())
+    ok = n_esc > 0 and lv_max >= 1.0
+    print(f"controller: escalations={n_esc:.0f} max-level={lv_max:.0f} "
+          f"({'escalation ok' if ok else 'MISMATCH'})")
+    failures += 0 if ok else 1
+
+    if failures:
+        print(f"{failures} recovery smoke check(s) FAILED",
+              file=sys.stderr)
+        return 1
+    print("recovery smoke: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
